@@ -1,0 +1,37 @@
+"""Experiment IV (paper Fig. 11): all four base algorithms vs DAG variants.
+
+FwdSLCA / BwdSLCA+ / FwdELCA / BwdELCA on category-1 and category-3 length-3
+queries.  Paper claims: DAG overhead on cat-1 for every algorithm; significant
+DAG wins on cat-3; backward generally beats forward except the DAG-SLCA
+variants (DAG compression already removes most of what parent-skipping wins).
+"""
+from .common import emit, engine_for, time_query
+from repro.data import QUERIES
+
+ALGOS = [
+    ("FwdSLCA", "fwd_slca", "slca"),
+    ("BwdSLCA+", "bwd_slca_plus", "slca"),
+    ("FwdELCA", "fwd_elca", "elca"),
+    ("BwdELCA", "bwd_elca", "elca"),
+]
+
+
+def run() -> dict:
+    eng = engine_for()
+    out = {}
+    for q in ("Q2", "Q8"):
+        cat, kws = QUERIES[q]
+        for label, algo, sem in ALGOS:
+            base = time_query(eng, kws, index="tree", backend="scalar",
+                              algorithm=algo, semantics=sem)
+            dag = time_query(eng, kws, index="dag", backend="scalar",
+                             algorithm=algo, semantics=sem)
+            emit(f"fig11.cat{cat}.{q}.{label}", base, "")
+            emit(f"fig11.cat{cat}.{q}.Dag{label}", dag,
+                 f"speedup={base / dag:.2f}x")
+            out[(q, label)] = (base, dag)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Experiment I (paper Fig. 8): base vs DAG search across query categories.
+
+Fixed database size and query length (3); category varies 1..3.  The paper's
+claim: DAG slightly slower on cat-1 (no redundancy to exploit, RCPM checks
+are pure overhead), comparable on cat-2, >2x faster on cat-3.
+"""
+from .common import REPEATS, category_queries, emit, engine_for, time_query
+
+
+def run() -> dict:
+    eng = engine_for()
+    out = {}
+    for cat in (1, 2, 3):
+        for q, kws in category_queries(cat, length=3):
+            base = time_query(eng, kws, index="tree", backend="scalar",
+                              algorithm="fwd_slca", semantics="slca")
+            dag = time_query(eng, kws, index="dag", backend="scalar",
+                             algorithm="fwd_slca", semantics="slca")
+            emit(f"fig8.cat{cat}.{q}.FwdSLCA", base, f"category={cat}")
+            emit(f"fig8.cat{cat}.{q}.DagFwdSLCA", dag,
+                 f"speedup={base / dag:.2f}x")
+            out[(cat, q)] = (base, dag)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Experiment III (paper Fig. 10): scaling the database size.
+
+The paper halves the discogs dump repeatedly (0.8..12.6GB); we scale the
+synthetic catalog geometrically.  Claim: search time grows with size for both
+algorithms; the base/DAG ratio stays roughly constant.
+"""
+from .common import N_RELEASES, emit, engine_for, time_query
+from repro.data import QUERIES
+
+
+def run() -> dict:
+    out = {}
+    sizes = [max(N_RELEASES // 8, 64), N_RELEASES // 4, N_RELEASES // 2, N_RELEASES]
+    for n in sizes:
+        eng = engine_for(n)
+        for q in ("Q2", "Q8"):  # cat-1 and cat-3, length 3
+            cat, kws = QUERIES[q]
+            base = time_query(eng, kws, index="tree", backend="scalar",
+                              algorithm="fwd_slca")
+            dag = time_query(eng, kws, index="dag", backend="scalar",
+                             algorithm="fwd_slca")
+            emit(f"fig10.n{n}.{q}.FwdSLCA", base, f"releases={n}")
+            emit(f"fig10.n{n}.{q}.DagFwdSLCA", dag, f"speedup={base/dag:.2f}x")
+            out[(n, q)] = (base, dag)
+    return out
+
+
+if __name__ == "__main__":
+    run()

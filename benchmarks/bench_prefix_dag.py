@@ -1,0 +1,57 @@
+"""Beyond-paper: prefix-DAG KV dedup for LM serving (paper insight -> LMs).
+
+Synthetic serving batch: R requests sharing a system prompt and one of T
+few-shot templates (the redundancy profile of real serving traffic).
+Reports dedup savings (fraction of prefill tokens eliminated) and validates
+that deduped prefill logits match naive per-request prefill.
+"""
+import numpy as np
+
+from .common import emit
+
+from repro.serve.prefix_dag import plan_batch
+
+
+def make_batch(r=32, templates=4, sys_len=160, tmpl_len=96, user_len=24, seed=0):
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, 500, size=sys_len).astype(np.int32)
+    tmpl = [rng.integers(0, 500, size=tmpl_len).astype(np.int32) for _ in range(templates)]
+    prompts = []
+    for i in range(r):
+        user = rng.integers(0, 500, size=user_len).astype(np.int32)
+        prompts.append(np.concatenate([sys_p, tmpl[i % templates], user]))
+    return prompts
+
+
+def run() -> dict:
+    prompts = make_batch()
+    dag, plan = plan_batch(prompts, block=16)
+    emit("pdag.total_prefill_tokens", plan.total_tokens, "")
+    emit("pdag.after_dedup",
+         plan.unique_tokens + sum(len(t) for t in plan.tails),
+         f"savings={100 * plan.savings:.0f}%")
+    emit("pdag.blocks.hit", dag.hits, f"miss={dag.misses}")
+
+    # correctness on a tiny model
+    import jax
+    from repro.configs import CONFIGS
+    from repro.models import init_cache, init_params, prefill
+    from repro.serve.prefix_dag import run_with_prefix_dag
+
+    cfg = CONFIGS["smollm-135m"].reduced()
+    params = init_params(jax.random.key(0), cfg)
+    small = [p[:48] % cfg.vocab for p in prompts[:6]]
+    logits, _, plan_small = run_with_prefix_dag(params, cfg, small, max_len=64)
+    for i, p in enumerate(small):
+        cache = init_cache(cfg, 1, 64)
+        want, _ = prefill(params, cfg, p[None], cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[i], np.float32), np.asarray(want[0], np.float32),
+            rtol=0.1, atol=0.1,
+        )
+    emit("pdag.correctness", 1, f"batch_savings={100 * plan_small.savings:.0f}%")
+    return {"savings": plan.savings}
+
+
+if __name__ == "__main__":
+    run()

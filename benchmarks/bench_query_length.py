@@ -1,0 +1,27 @@
+"""Experiment II (paper Fig. 9): query length 2/3/4 for categories 1 and 3.
+
+Paper claim: base slightly ahead on cat-1 with the gap narrowing as length
+grows (fewer results => less DAG overhead); DAG ahead on cat-3 throughout.
+"""
+from .common import category_queries, emit, engine_for, time_query
+
+
+def run() -> dict:
+    eng = engine_for()
+    out = {}
+    for cat in (1, 3):
+        for length in (2, 3, 4):
+            for q, kws in category_queries(cat, length=length):
+                base = time_query(eng, kws, index="tree", backend="scalar",
+                                  algorithm="fwd_slca")
+                dag = time_query(eng, kws, index="dag", backend="scalar",
+                                 algorithm="fwd_slca")
+                emit(f"fig9.cat{cat}.len{length}.{q}.FwdSLCA", base, "")
+                emit(f"fig9.cat{cat}.len{length}.{q}.DagFwdSLCA", dag,
+                     f"speedup={base / dag:.2f}x")
+                out[(cat, length)] = (base, dag)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,92 @@
+"""Paper Tables II & III: query result counts + DAG compression savings.
+
+Table II: per query — CA / ELCA / SLCA totals and the share removed by DAG
+compression (savings = 1 - deduped/total, where deduped counts each
+redundancy component's results once).
+Table III: per keyword — containment-path entries and direct-container nodes,
+with the same savings measure over the per-RC IDLists.
+"""
+import numpy as np
+
+from .common import emit, engine_for
+from repro.core import brute, search_base
+from repro.data import QUERIES
+
+
+def _dag_result_count(eng, kws, algorithm) -> int:
+    """Result entries across searched RCs, each RC counted once (memoized).
+
+    ``algorithm`` may also be "ca" (plain intersection) for Table II's CA row.
+    """
+    index = eng.cluster
+    base = (
+        search_base.ca_all
+        if algorithm == "ca"
+        else search_base.BASE_ALGORITHMS[algorithm]
+    )
+    # walk RC reachability via SLCA results (the set of searched RCs),
+    # counting `base` results once per RC
+    seen: dict[int, int] = {}
+
+    def solve(rc):
+        if rc in seen:
+            return
+        seen[rc] = len(base(index.idlists(rc, kws)))
+        res = search_base.fwd_slca(index.idlists(rc, kws))
+        root = index.rc_root_id(rc)
+        for x in map(int, res):
+            if x == root:
+                continue
+            e = index.rcpm_lookup(x)
+            if e is not None:
+                solve(e.rc)
+
+    solve(0)
+    return sum(seen.values())
+
+
+def run() -> dict:
+    eng = engine_for()
+    tree = eng.tree
+    out = {}
+    for q, (cat, kws) in QUERIES.items():
+        kk = eng.keyword_ids(kws)
+        if any(k < 0 for k in kk):
+            continue
+        ca = brute.ca_nodes(tree, kk).size
+        slca = brute.slca_nodes(tree, kk).size
+        elca = brute.elca_nodes(tree, kk).size
+        d_ca = _dag_result_count(eng, kk, "ca")
+        d_slca = _dag_result_count(eng, kk, "fwd_slca")
+        d_elca = _dag_result_count(eng, kk, "fwd_elca")
+        s_ca = 100 * (1 - d_ca / ca) if ca else 0
+        s_slca = 100 * (1 - d_slca / slca) if slca else 0
+        s_elca = 100 * (1 - d_elca / elca) if elca else 0
+        emit(f"tab2.{q}.CA", ca, f"cat={cat} S_ca={s_ca:.0f}%")
+        emit(f"tab2.{q}.SLCA", slca, f"S_slca={s_slca:.0f}%")
+        emit(f"tab2.{q}.ELCA", elca, f"S_elca={s_elca:.0f}%")
+        out[q] = dict(ca=ca, slca=slca, elca=elca,
+                      s_ca=s_ca, s_slca=s_slca, s_elca=s_elca)
+
+    # Table III: keyword statistics
+    kws_all = sorted({w for _, ws in QUERIES.values() for w in ws})
+    for w in kws_all:
+        k = eng.tree.vocab.get(w)
+        if k < 0:
+            continue
+        lst = eng.base.idlist(k)
+        path = len(lst)
+        nodes = int(np.sum(tree.kw_ids == k))  # nodes directly containing w
+        # deduped path length: sum of per-RC list lengths
+        dag_path = sum(
+            len(eng.cluster.idlist(rc, k)) for rc in range(eng.cluster.num_rcs)
+        )
+        s_path = 100 * (1 - dag_path / path) if path else 0
+        emit(f"tab3.{w}.path", path, f"S_path={s_path:.0f}%")
+        emit(f"tab3.{w}.nodes", nodes, "")
+        out[w] = dict(path=path, nodes=nodes, dag_path=dag_path, s_path=s_path)
+    return out
+
+
+if __name__ == "__main__":
+    run()

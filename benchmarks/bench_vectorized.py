@@ -1,0 +1,32 @@
+"""Beyond-paper: scalar vs vectorized-JAX vs Pallas search backends.
+
+The paper's algorithms are pointer-chasing; our TPU adaptation is dense and
+batched.  On CPU the Pallas kernels run in interpret mode (slow), so the
+meaningful comparison here is scalar-vs-XLA; kernel timing belongs to real
+TPUs.  Correctness equivalence is asserted on every row.
+"""
+import numpy as np
+
+from .common import emit, engine_for, time_query
+from repro.data import QUERIES
+
+
+def run() -> dict:
+    eng = engine_for()
+    out = {}
+    for q in ("Q2", "Q5", "Q8"):
+        cat, kws = QUERIES[q]
+        want = eng.query(kws, index="tree", backend="scalar")
+        for index in ("tree", "dag"):
+            got = eng.query(kws, index=index, backend="jax")
+            np.testing.assert_array_equal(got, want)
+            scalar = time_query(eng, kws, index=index, backend="scalar")
+            vec = time_query(eng, kws, index=index, backend="jax")
+            emit(f"vec.{q}.{index}.scalar", scalar, "")
+            emit(f"vec.{q}.{index}.jax", vec, f"speedup={scalar / vec:.2f}x")
+            out[(q, index)] = (scalar, vec)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Shared benchmark plumbing: corpus cache, timing, CSV output.
+
+Scale: the paper uses the 12.6GB discogs dump; offline we default to
+N_RELEASES=2000 (~100k nodes) and scale with the BENCH_RELEASES env var.
+Times are averages over warm repeats (paper: 1000 warm runs; we default to
+BENCH_REPEATS=5 to keep `python -m benchmarks.run` short on one CPU).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from functools import lru_cache
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import KeywordSearchEngine  # noqa: E402
+from repro.data import QUERIES, generate_discogs_tree  # noqa: E402
+
+N_RELEASES = int(os.environ.get("BENCH_RELEASES", "2000"))
+REPEATS = int(os.environ.get("BENCH_REPEATS", "5"))
+
+
+@lru_cache(maxsize=4)
+def engine_for(n_releases: int = 0) -> KeywordSearchEngine:
+    n = n_releases or N_RELEASES
+    tree = generate_discogs_tree(n_releases=n, seed=0)
+    return KeywordSearchEngine(tree)
+
+
+def time_query(eng, kws, repeats: int = 0, **kw) -> float:
+    """Mean wall-time (µs) of eng.query over warm repeats."""
+    repeats = repeats or REPEATS
+    eng.query(kws, **kw)  # warm (jit/caches)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        eng.query(kws, **kw)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def category_queries(cat: int, length: int | None = None):
+    for q, (c, kws) in QUERIES.items():
+        if c == cat and (length is None or len(kws) == length):
+            yield q, kws

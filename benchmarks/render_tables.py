@@ -1,0 +1,87 @@
+"""Render EXPERIMENTS.md tables from the dry-run / hillclimb JSON artifacts."""
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+
+
+def roofline_table(path=None) -> str:
+    path = path or os.path.join(HERE, "dryrun_single_pod.json")
+    recs = json.load(open(path))
+    rows = [
+        "| arch | shape | compute | memory | collective | bound | useful | frac | args/dev | temp/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok") or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        m = r["memory"]
+        gb = lambda x: f"{(x or 0)/2**30:.1f}G"
+        ms = lambda x: f"{max(x,0)*1e3:.1f}ms" if x < 10 else f"{x:.1f}s"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {ms(rf['compute_s'])} "
+            f"| {ms(rf['memory_s'])} | {ms(rf['collective_s'])} "
+            f"| {rf['bottleneck'].replace('_s','')} | {rf['useful_ratio']:.2f} "
+            f"| {rf['hw_fraction']:.2f} | {gb(m['argument_bytes'])} "
+            f"| {gb(m['temp_bytes'])} |"
+        )
+    return "\n".join(rows)
+
+
+def multipod_table(path=None) -> str:
+    path = path or os.path.join(HERE, "dryrun_multi_pod.json")
+    recs = json.load(open(path))
+    rows = [
+        "| arch | shape | mesh | compile | args/dev | temp/dev |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        m = r["memory"]
+        gb = lambda x: f"{(x or 0)/2**30:.1f}G"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']}s "
+            f"| {gb(m['argument_bytes'])} | {gb(m['temp_bytes'])} |"
+        )
+    return "\n".join(rows)
+
+
+def hillclimb_table(path=None) -> str:
+    path = path or os.path.join(HERE, "hillclimb_log.json")
+    recs = json.load(open(path))
+    rows = [
+        "| cell | iteration | compute | memory | collective | bound | frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            rows.append(f"| {r['cell']} | {r['iteration']} | FAILED | | | | |")
+            continue
+        if "compute_s" not in r:  # wall-clock iteration (search engine)
+            rows.append(
+                f"| {r['cell']} | {r['iteration']} | "
+                f"{r.get('measured', '')} | | | wall-clock | |"
+            )
+            continue
+        ms = lambda x: f"{x*1e3:.0f}ms" if x < 10 else f"{x:.1f}s"
+        rows.append(
+            f"| {r['cell']} | {r['iteration']} | {ms(r['compute_s'])} "
+            f"| {ms(r['memory_s'])} | {ms(r['collective_s'])} "
+            f"| {r['bottleneck'].replace('_s','')} | {r['hw_fraction']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "roofline"):
+        print(roofline_table())
+    if which in ("all", "multipod"):
+        print()
+        print(multipod_table())
+    if which in ("all", "hillclimb"):
+        print()
+        print(hillclimb_table())

@@ -1,0 +1,42 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Scale knobs:
+BENCH_RELEASES (default 2000 releases ~ 100k nodes), BENCH_REPEATS.
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from . import (
+        bench_algorithms,
+        bench_category,
+        bench_db_size,
+        bench_index_size,
+        bench_prefix_dag,
+        bench_query_length,
+        bench_search_hillclimb,
+        bench_table_properties,
+        bench_vectorized,
+    )
+
+    sections = [
+        ("tables II/III (query & keyword properties)", bench_table_properties),
+        ("fig 8 / experiment I (categories)", bench_category),
+        ("fig 9 / experiment II (query length)", bench_query_length),
+        ("fig 10 / experiment III (database size)", bench_db_size),
+        ("fig 11 / experiment IV (algorithms)", bench_algorithms),
+        ("§IV-F (index size)", bench_index_size),
+        ("beyond-paper: vectorized backends", bench_vectorized),
+        ("beyond-paper: search perf hillclimb", bench_search_hillclimb),
+        ("beyond-paper: prefix-DAG serving dedup", bench_prefix_dag),
+    ]
+    t0 = time.time()
+    for title, mod in sections:
+        print(f"# --- {title} ---", flush=True)
+        mod.run()
+    print(f"# done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: DAG-compressed XML keyword search in five lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import KeywordSearchEngine
+
+XML = """
+<bib>
+  <release>
+    <title>Thriller</title>
+    <versions>
+      <details><format>Vinyl</format><country>USA</country><language>English</language></details>
+    </versions>
+    <note>USA</note><note2>English</note2>
+  </release>
+  <release2>
+    <details><format>Vinyl</format><country>USA</country><language>English</language></details>
+  </release2>
+</bib>
+"""
+
+engine = KeywordSearchEngine.from_xml(XML)
+
+print("query: USA English")
+for semantics in ("slca", "elca"):
+    for index in ("tree", "dag"):
+        for backend in ("scalar", "jax", "pallas"):
+            ids = engine.query(["USA", "English"], semantics=semantics,
+                               index=index, backend=backend)
+            print(f"  {semantics:4s} {index:4s} {backend:6s} -> nodes {ids.tolist()}")
+
+sizes = engine.index_sizes()
+print(f"tree nodes: {sizes['tree_nodes']}, DAG nodes: {sizes['dag_nodes']}, "
+      f"redundancy components: {sizes['num_rcs']}, RCPM entries: {sizes['rcpm_entries']}")

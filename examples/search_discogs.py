@@ -1,0 +1,57 @@
+"""End-to-end search driver: build the IDCluster over a discogs-like catalog
+and run the paper's nine queries on base vs DAG indices with timings.
+
+    PYTHONPATH=src python examples/search_discogs.py --releases 2000
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import KeywordSearchEngine
+from repro.data import QUERIES, generate_discogs_tree
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--releases", type=int, default=2000)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--semantics", default="slca", choices=["slca", "elca"])
+    args = ap.parse_args()
+
+    t0 = time.time()
+    tree = generate_discogs_tree(n_releases=args.releases, seed=0)
+    print(f"corpus: {tree.num_nodes} nodes ({time.time()-t0:.1f}s)")
+    t0 = time.time()
+    eng = KeywordSearchEngine(tree)
+    s = eng.index_sizes()
+    print(
+        f"index: {s['tree_entries']} tree entries -> {s['dag_entries']} DAG entries "
+        f"({s['num_rcs']} RCs, {time.time()-t0:.1f}s build)"
+    )
+
+    print(f"\n{'query':34s} {'cat':>3s} {'results':>8s} {'base µs':>10s} "
+          f"{'DAG µs':>10s} {'speedup':>8s}")
+    for q, (cat, kws) in QUERIES.items():
+        res = eng.query(kws, semantics=args.semantics, index="tree")
+        dag_res = eng.query(kws, semantics=args.semantics, index="dag")
+        assert np.array_equal(res, dag_res), "DAG results must match tree results"
+
+        def bench(index):
+            eng.query(kws, semantics=args.semantics, index=index)
+            t = time.time()
+            for _ in range(args.repeats):
+                eng.query(kws, semantics=args.semantics, index=index)
+            return (time.time() - t) / args.repeats * 1e6
+
+        b, d = bench("tree"), bench("dag")
+        print(f"{q} {' '.join(kws):27s} {cat:3d} {len(res):8d} "
+              f"{b:10.0f} {d:10.0f} {b/d:7.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Batched serving with prefix-DAG KV dedup (the paper's insight on LMs).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(
+        main(
+            [
+                "--arch", "smollm-135m", "--reduced",
+                "--requests", "8", "--prompt-len", "64",
+                "--shared-prefix", "48", "--gen", "12", "--prefix-dag",
+            ]
+        )
+    )

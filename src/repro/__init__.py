@@ -1,0 +1,1 @@
+"""repro - IDCluster (DAG-compressed XML keyword search) as a JAX/TPU framework."""

@@ -1,0 +1,29 @@
+"""IDCluster — DAG-compressed XML keyword search (the paper's contribution).
+
+Public API: :class:`KeywordSearchEngine`, plus the index/search building
+blocks for power users (BaseIndex, IDClusterIndex, search algorithms).
+"""
+from .engine import KeywordSearchEngine
+from .xml_tree import XMLTree, NodeSpec, Vocab, build_tree, parse
+from .idlist import BaseIndex, IDList, build_containment
+from .components import IDClusterIndex, build_indices
+from .dag import compress
+from . import brute, search_base, search_vec
+
+__all__ = [
+    "KeywordSearchEngine",
+    "XMLTree",
+    "NodeSpec",
+    "Vocab",
+    "build_tree",
+    "parse",
+    "BaseIndex",
+    "IDList",
+    "build_containment",
+    "IDClusterIndex",
+    "build_indices",
+    "compress",
+    "brute",
+    "search_base",
+    "search_vec",
+]

@@ -1,0 +1,131 @@
+"""Public keyword-search API: build both indices once, query many times.
+
+    engine = KeywordSearchEngine.from_xml(xml_string)      # or from_tree(...)
+    engine.query(["USA", "English"], semantics="slca")     # -> node ids
+
+``index``    "tree" (Zhou et al. baseline) or "dag" (the paper's IDCluster)
+``backend``  "scalar" (paper-faithful host algorithms), "jax" (vectorized),
+             or "pallas" (vectorized with the Pallas intersection kernel)
+``algorithm`` scalar backend only: fwd/bwd × slca/elca variant selection.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import search_base, search_vec
+from .components import IDClusterIndex, build_indices
+from .idlist import BaseIndex
+from .search_dag import dag_search_vec
+from .xml_tree import XMLTree, parse
+
+
+@dataclass
+class QueryStats:
+    """Diagnostics attached to the last query (benchmark plumbing)."""
+
+    data: dict = field(default_factory=dict)
+
+
+class KeywordSearchEngine:
+    def __init__(self, tree: XMLTree, build_dag: bool = True):
+        self.tree = tree
+        if build_dag:
+            self.base, self.cluster = build_indices(tree)
+        else:
+            self.base, self.cluster = BaseIndex(tree), None
+        self.last_stats = QueryStats()
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_xml(cls, source: str, **kw) -> "KeywordSearchEngine":
+        return cls(parse(source), **kw)
+
+    @classmethod
+    def from_tree(cls, tree: XMLTree, **kw) -> "KeywordSearchEngine":
+        return cls(tree, **kw)
+
+    # ------------------------------------------------------------------ #
+    def keyword_ids(self, keywords: list[str] | str) -> list[int]:
+        if isinstance(keywords, str):
+            keywords = keywords.split()
+        return [self.tree.vocab.get(w) for w in keywords]
+
+    def query(
+        self,
+        keywords: list[str] | str,
+        semantics: str = "slca",
+        index: str = "dag",
+        backend: str = "scalar",
+        algorithm: str | None = None,
+    ) -> np.ndarray:
+        """Run one keyword query; returns sorted original node ids."""
+        kws = self.keyword_ids(keywords)
+        if any(k < 0 for k in kws) or not kws:
+            return np.zeros(0, dtype=np.int64)
+        self.last_stats = QueryStats()
+        if semantics not in ("slca", "elca"):
+            raise ValueError(f"semantics must be slca|elca, got {semantics!r}")
+
+        if index == "tree":
+            if backend == "scalar":
+                algo = algorithm or f"fwd_{semantics}"
+                fn = search_base.BASE_ALGORITHMS[algo]
+                return fn(self.base.idlists(kws)).astype(np.int64)
+            if backend == "pallas":
+                from repro.kernels import ops as kernel_ops  # lazy: avoid cycle
+
+                return kernel_ops.run_query_pallas(
+                    self.base.idlists(kws), semantics=semantics
+                )
+            return search_vec.run_query(
+                self.base.idlists(kws), semantics=semantics, backend="xla"
+            )
+
+        if index == "dag":
+            if self.cluster is None:
+                raise ValueError("engine was built without the DAG index")
+            if backend == "scalar":
+                algo = algorithm or f"fwd_{semantics}"
+                return search_base.dag_search(
+                    self.cluster, kws, algorithm=algo,
+                    collect_stats=self.last_stats.data,
+                )
+            return dag_search_vec(
+                self.cluster,
+                kws,
+                semantics=semantics,
+                backend="pallas" if backend == "pallas" else "xla",
+                stats=self.last_stats.data,
+            )
+        raise ValueError(f"index must be tree|dag, got {index!r}")
+
+    def query_batch(
+        self,
+        queries: list[list[str] | str],
+        semantics: str = "slca",
+    ) -> list[np.ndarray]:
+        """Serve many queries with cross-query batched DAG search (one device
+        launch per frontier round across the whole batch)."""
+        from .search_dag import dag_search_vec_multi
+
+        if self.cluster is None:
+            raise ValueError("engine was built without the DAG index")
+        kws = [self.keyword_ids(q) for q in queries]
+        self.last_stats = QueryStats()
+        return dag_search_vec_multi(
+            self.cluster, kws, semantics=semantics, stats=self.last_stats.data
+        )
+
+    # ------------------------------------------------------------------ #
+    def index_sizes(self) -> dict:
+        """Entry counts for the paper's §IV-F index-size comparison."""
+        out = {"tree_entries": self.base.num_entries()}
+        if self.cluster is not None:
+            out["dag_entries"] = self.cluster.num_entries()
+            out["rcpm_entries"] = self.cluster.rcpm_size()
+            out["num_rcs"] = self.cluster.num_rcs
+            out["dag_nodes"] = self.cluster.dag.num_canonical
+            out["tree_nodes"] = self.tree.num_nodes
+        return out

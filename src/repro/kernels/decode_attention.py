@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: fused GQA decode attention (flash-decode).
+
+The roofline table shows every decode cell memory-bound: one new token
+attends over a [B, T, Hk, hd] cache, and at XLA granularity the [B, H, T]
+score chain round-trips HBM several times.  This kernel streams the cache
+through VMEM once with an online softmax — the HBM traffic collapses to
+reading K/V once (the HBM-bandwidth-bound optimum for decode).
+
+Layout / grid:
+  grid = (B, T // BT); scratch (per grid row, persisted across the T walk):
+    m [H, 1]   running max
+    l [H, 1]   running normalizer
+    acc [H, hd] running weighted values
+  GQA is an unrolled loop over the Hk kv-heads (static, 1-16), each doing a
+  [rep, hd] × [hd, BT] MXU matmul against the streamed K block.
+
+Cache validity (`cache_len`) is scalar-prefetched per batch row; blocks fully
+past the valid region degenerate to masked no-ops (the index map still walks
+them — decode grids are tiny, T/BT ≤ a few hundred steps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(
+    len_ref,  # scalar prefetch: [B] int32 valid cache lengths
+    q_ref,  # [1, H, hd]
+    k_ref,  # [1, BT, Hk, hd]
+    v_ref,  # [1, BT, Hk, hd]
+    o_ref,  # [1, H, hd]
+    m_ref,  # scratch [H, 1] f32
+    l_ref,  # scratch [H, 1] f32
+    acc_ref,  # scratch [H, hd] f32
+    *,
+    bt: int,
+    n_rep: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [H, hd]
+    k = k_ref[0].astype(jnp.float32)  # [BT, Hk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    hk = k.shape[1]
+
+    pos = j * bt + jax.lax.broadcasted_iota(jnp.int32, (1, bt), 1)  # [1, BT]
+    valid = pos < len_ref[b]  # [1, BT]
+
+    for g in range(hk):  # static unroll over kv heads
+        qg = q[g * n_rep : (g + 1) * n_rep, :]  # [rep, hd]
+        scores = jnp.dot(qg, k[:, g, :].T) * scale  # [rep, BT]
+        scores = jnp.where(valid, scores, NEG_INF)
+        sl = slice(g * n_rep, (g + 1) * n_rep)
+        m_old = m_ref[sl, :]  # [rep, 1]
+        m_new = jnp.maximum(m_old[:, 0], jnp.max(scores, axis=1))[:, None]
+        alpha = jnp.exp(m_old - m_new)  # [rep, 1]
+        p = jnp.exp(scores - m_new)  # [rep, BT]
+        p = jnp.where(valid, p, 0.0)
+        l_ref[sl, :] = l_ref[sl, :] * alpha + jnp.sum(p, axis=1)[:, None]
+        acc_ref[sl, :] = acc_ref[sl, :] * alpha + jnp.dot(p, v[:, g, :])
+        m_ref[sl, :] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def decode_attention_pallas_call(
+    q: jax.Array,  # [B, H, hd]
+    k: jax.Array,  # [B, T, Hk, hd]
+    v: jax.Array,  # [B, T, Hk, hd]
+    cache_len: jax.Array,  # [B] int32
+    *,
+    bt: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, hd = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    assert t % bt == 0 and h % hk == 0
+    n_rep = h // hk
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, t // bt),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda bi, j, L: (bi, 0, 0)),
+            pl.BlockSpec((1, bt, hk, hd), lambda bi, j, L: (bi, j, 0, 0)),
+            pl.BlockSpec((1, bt, hk, hd), lambda bi, j, L: (bi, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda bi, j, L: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _decode_attn_kernel, bt=bt, n_rep=n_rep, scale=1.0 / (hd**0.5)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), q, k, v)

@@ -1,0 +1,164 @@
+"""Jit-ready wrappers around the Pallas kernels + the kernel-backed query path.
+
+The membership kernel needs one *static* parameter — the window width (how
+many blocks of the larger list a query block may span).  It is data-dependent,
+so these wrappers are host-driven: numpy computes block starts and the
+bucketed window, then dispatches one of a handful of compiled kernel variants.
+On a real TPU the bookkeeping is a few hundred bytes per call; the heavy
+compare runs in the kernel.  interpret=True executes the same kernel body on
+CPU (how this container validates them).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.idlist import IDList
+
+from .elca_segsum import elca_segsum_pallas_call
+from .intersect import membership_pallas_call
+from .searchsorted import searchsorted_pallas_call
+
+INT_PAD = np.int32(2**31 - 1)
+
+# interpret-mode flag: True on CPU (this container); a TPU deployment flips it
+INTERPRET = True
+
+
+def _pad_to(arr: np.ndarray, mult: int, fill) -> np.ndarray:
+    n = arr.shape[-1]
+    m = ((n + mult - 1) // mult) * mult
+    m = max(m, mult)
+    if arr.ndim == 1:
+        out = np.full((m,), fill, dtype=np.int32)
+        out[:n] = arr
+    else:
+        out = np.full((arr.shape[0], m), fill, dtype=np.int32)
+        out[:, :n] = arr
+    return out
+
+
+def _bucket_pow2(n: int, lo: int = 1) -> int:
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+def intersect_membership(
+    a_sorted: np.ndarray,
+    queries_sorted: np.ndarray,
+    *,
+    bq: int = 512,
+    ba: int = 512,
+    interpret: bool | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """found/pos of each (sorted) query in sorted unique int32 array ``a``."""
+    interpret = INTERPRET if interpret is None else interpret
+    nq = queries_sorted.shape[0]
+    a_p = _pad_to(np.asarray(a_sorted, np.int32), ba, INT_PAD)
+    q_p = _pad_to(np.asarray(queries_sorted, np.int32), bq, INT_PAD)
+    na_blocks = a_p.shape[0] // ba
+    nq_blocks = q_p.shape[0] // bq
+
+    # window bookkeeping (host): first/last a-block per q-block
+    q_lo = q_p[::bq]
+    q_hi = q_p[bq - 1 :: bq]
+    a_start = np.minimum(
+        np.searchsorted(a_p, q_lo, side="left") // ba, na_blocks - 1
+    ).astype(np.int32)
+    a_end = np.minimum(
+        (np.maximum(np.searchsorted(a_p, q_hi, side="right") - 1, 0)) // ba,
+        na_blocks - 1,
+    )
+    window = int(np.max(a_end - a_start + 1)) if nq_blocks else 1
+    window = min(_bucket_pow2(window), na_blocks)
+
+    found, pos = membership_pallas_call(
+        jnp.asarray(a_p), jnp.asarray(q_p), jnp.asarray(a_start), window,
+        bq=bq, ba=ba, interpret=interpret,
+    )
+    return np.asarray(found)[:nq], np.asarray(pos)[:nq]
+
+
+def searchsorted_positions(
+    a_sorted: np.ndarray,
+    queries: np.ndarray,
+    *,
+    bq: int = 512,
+    ba: int = 512,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    interpret = INTERPRET if interpret is None else interpret
+    nq = queries.shape[0]
+    na = a_sorted.shape[0]
+    a_p = _pad_to(np.asarray(a_sorted, np.int32), ba, INT_PAD)
+    q_p = _pad_to(np.asarray(queries, np.int32), bq, INT_PAD)
+    pos = searchsorted_pallas_call(
+        jnp.asarray(a_p), jnp.asarray(q_p), bq=bq, ba=ba, interpret=interpret
+    )
+    return np.minimum(np.asarray(pos)[:nq], na)
+
+
+def elca_child_sums(
+    ca_ids: np.ndarray,
+    par_ids: np.ndarray,
+    nd: np.ndarray,  # [K, M] aligned with ca/par
+    *,
+    bi: int = 512,
+    bj: int = 512,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    interpret = INTERPRET if interpret is None else interpret
+    mi = ca_ids.shape[0]
+    ca_p = _pad_to(np.asarray(ca_ids, np.int32), bi, INT_PAD)
+    par_p = _pad_to(np.asarray(par_ids, np.int32), bj, -1)
+    nd_p = _pad_to(np.asarray(nd, np.int32), bj, 0)
+    out = elca_segsum_pallas_call(
+        jnp.asarray(ca_p), jnp.asarray(par_p), jnp.asarray(nd_p),
+        bi=bi, bj=bj, interpret=interpret,
+    )
+    return np.asarray(out)[:, :mi]
+
+
+# --------------------------------------------------------------------------- #
+# Full kernel-backed query path (engine backend="pallas")
+# --------------------------------------------------------------------------- #
+
+
+def run_query_pallas(
+    lists: list[IDList], semantics: str = "slca", *, block: int = 512
+) -> np.ndarray:
+    """SLCA/ELCA via the Pallas kernels (host-compacted; see DESIGN.md §2)."""
+    if not lists or any(len(l) == 0 for l in lists):
+        return np.zeros(0, dtype=np.int64)
+    order = np.argsort([len(l) for l in lists], kind="stable")
+    lists = [lists[i] for i in order]
+    l0 = lists[0]
+    k = len(lists)
+
+    ca_mask = np.ones(len(l0), dtype=bool)
+    nd = [l0.ndesc.astype(np.int64)]
+    for l in lists[1:]:
+        found, pos = intersect_membership(l.ids, l0.ids, bq=block, ba=block)
+        ca_mask &= found
+        nd.append(l.ndesc[np.minimum(pos, len(l) - 1)].astype(np.int64))
+
+    ca = l0.ids[ca_mask].astype(np.int64)
+    if ca.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    pid0 = np.where(l0.pidpos >= 0, l0.ids[np.clip(l0.pidpos, 0, len(l0) - 1)], -1)
+    par = pid0[ca_mask].astype(np.int64)
+
+    if semantics == "slca":
+        next_par = np.concatenate([par[1:], [-1]])
+        keep = next_par != ca
+        return ca[keep]
+    if semantics == "elca":
+        nd_ca = np.stack([row[ca_mask] for row in nd])  # [k, m]
+        sums = elca_child_sums(ca, par, nd_ca, bi=block, bj=block)
+        keep = np.all(nd_ca - sums >= 1, axis=0)
+        return ca[keep]
+    if semantics == "ca":
+        return ca
+    raise ValueError(f"unknown semantics {semantics!r}")

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT_PAD = jnp.int32(2**31 - 1)
+
+
+def membership_ref(
+    a_padded: jax.Array, q_padded: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """(found, pos) of each query in a sorted padded array (searchsorted)."""
+    ma = a_padded.shape[0]
+    pos = jnp.searchsorted(a_padded, q_padded, side="left").astype(jnp.int32)
+    pos_c = jnp.minimum(pos, ma - 1)
+    found = a_padded[pos_c] == q_padded
+    return found, jnp.where(found, pos_c, 0)
+
+
+def searchsorted_ref(a_padded: jax.Array, q_padded: jax.Array) -> jax.Array:
+    """#elements of A strictly below each query (searchsorted left)."""
+    return jnp.searchsorted(a_padded, q_padded, side="left").astype(jnp.int32)
+
+
+def elca_segsum_ref(
+    ca_padded: jax.Array, par_padded: jax.Array, nd_padded: jax.Array
+) -> jax.Array:
+    """child_sum[k, i] = sum of nd[k, j] where par[j] == ca[i] (dense oracle)."""
+    eq = par_padded[None, :] == ca_padded[:, None]  # [MI, MJ]
+    return jnp.einsum("ij,kj->ki", eq.astype(jnp.int32), nd_padded)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [B, H, hd]
+    k: jax.Array,  # [B, T, Hk, hd]
+    v: jax.Array,  # [B, T, Hk, hd]
+    cache_len: jax.Array,  # [B] int32
+) -> jax.Array:
+    """Plain masked softmax attention for one token (decode oracle)."""
+    b, h, hd = q.shape
+    hk = k.shape[2]
+    n_rep = h // hk
+    kf = jnp.repeat(k, n_rep, axis=2).astype(jnp.float32)  # [B,T,H,hd]
+    vf = jnp.repeat(v, n_rep, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32), kf) / (hd**0.5)
+    mask = jnp.arange(k.shape[1])[None, None, :] < cache_len[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", probs, vf).astype(q.dtype)

@@ -1,0 +1,239 @@
+"""Attention mixers: GQA (RoPE, optional sliding window) and MLA (DeepSeek).
+
+Both support three entry modes:
+  * train/prefill: full sequence, causal (or bidirectional for encoders);
+  * decode: one new token against a KV cache (GQA caches k/v per kv-head,
+    MLA caches the compressed latent + shared rope key — its whole point).
+
+Softmax is computed in float32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MLAConfig, ModelConfig
+from .layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# GQA
+# --------------------------------------------------------------------------- #
+
+
+def gqa_init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, h * hd, dtype).reshape(d, h, hd),
+        "wk": dense_init(k2, d, hk * hd, dtype).reshape(d, hk, hd),
+        "wv": dense_init(k3, d, hk * hd, dtype).reshape(d, hk, hd),
+        "wo": dense_init(k4, h * hd, d, dtype).reshape(h, hd, d),
+    }
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q:[B,S,H,hd] k,v:[B,T,Hk,hd] mask:[B,1,S,T] or None -> [B,S,H,hd].
+
+    GQA is expressed by *repeating* k/v up to the full head count instead of
+    reshaping q to [.., Hk, rep, ..]: reshapes that split a sharded head dim
+    force GSPMD reshards, whereas the repeat of model-replicated k/v is a
+    local slice on every tensor-parallel shard (DESIGN.md §7).
+    """
+    b, s, h, hd = q.shape
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    logits = logits / np.sqrt(hd)
+    if mask is not None:
+        logits = logits + jnp.where(mask, 0.0, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def causal_mask(s: int, t: int, window: int = 0, offset: int = 0):
+    """[1, 1, s, t] True=keep. offset = position of query 0 within the keys."""
+    qpos = jnp.arange(s)[:, None] + offset
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def _sdpa_qchunked(q, k, v, n_rep: int, causal: bool, window: int, chunk: int):
+    """Query-chunked attention: peak activation memory divided by #chunks.
+
+    A *static* Python loop (not lax.scan) so the dry-run cost accounting sees
+    every chunk and remat policies stay per-layer.  The T dim stays whole —
+    k/v are visited once per chunk (the memory win is the [B,H,S,T] score
+    tensor shrinking to [B,H,chunk,T]; flash-style online softmax is the
+    further step if scores ever dominate again)."""
+    b, s, h, hd = q.shape
+    outs = []
+    for i in range(0, s, chunk):
+        qs = jax.lax.slice_in_dim(q, i, i + chunk, axis=1)
+        m = causal_mask(chunk, k.shape[1], window, offset=i) if causal else None
+        outs.append(_sdpa(qs, k, v, m, n_rep))
+    return jnp.concatenate(outs, axis=1)
+
+
+def gqa_apply(
+    params,
+    x,  # [B, S, D]
+    cfg: ModelConfig,
+    positions,  # [B, S] int32
+    cache: dict | None = None,  # {"k":[B,T,Hk,hd], "v":..., "len": int32}
+    causal: bool = True,
+):
+    from repro.dist import ctx as shard_ctx
+
+    b, s, _ = x.shape
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    sctx = shard_ctx.current()
+    if sctx is not None:
+        # heads over "model" (padded when uneven): attention runs head-TP
+        q = sctx.constrain_heads(q)
+
+    if cache is not None:
+        # decode: write new k/v at position cache["len"] (static s, usually 1)
+        start = cache["len"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
+        t = ck.shape[1]
+        kpos = jnp.arange(t)[None, :]
+        valid = kpos < (start + s)
+        if causal:
+            qpos = positions[:, :, None]  # [B, S, 1]
+            m = (kpos[None] <= qpos) & valid[:, None]
+        else:
+            m = jnp.broadcast_to(valid[:, None], (b, s, t))
+        if cfg.attn_window > 0:
+            m &= kpos[None] > (positions[:, :, None] - cfg.attn_window)
+        out = _sdpa(q, ck, cv, m[:, None], n_rep)
+        new_cache = {"k": ck, "v": cv, "len": start + s}
+    else:
+        chunk = cfg.attn_q_chunk
+        if chunk and s > chunk and s % chunk == 0:
+            out = _sdpa_qchunked(q, k, v, n_rep, causal, cfg.attn_window, chunk)
+        else:
+            m = None
+            if causal:
+                # keep [1,1,S,S]: broadcasting at the add-site fuses into the
+                # softmax producer; a batch-broadcast mask costs B·S² bytes
+                m = causal_mask(s, s, cfg.attn_window)
+            out = _sdpa(q, k, v, m, n_rep)
+        new_cache = None
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.int32(0),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# MLA (multi-head latent attention, DeepSeek-V2)
+# --------------------------------------------------------------------------- #
+
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    params = {
+        # q projection (full rank — V2-Lite has no q LoRA)
+        "wq": dense_init(ks[0], d, h * qk_dim, dtype).reshape(d, h, qk_dim),
+        # compressed kv: d -> latent + shared rope key
+        "w_dkv": dense_init(ks[1], d, m.kv_lora_rank, dtype),
+        "w_krope": dense_init(ks[2], d, m.qk_rope_head_dim, dtype),
+        # decompression: latent -> per-head k_nope / v
+        "w_uk": dense_init(ks[3], m.kv_lora_rank, h * m.qk_nope_head_dim, dtype)
+        .reshape(m.kv_lora_rank, h, m.qk_nope_head_dim),
+        "w_uv": dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype)
+        .reshape(m.kv_lora_rank, h, m.v_head_dim),
+        "wo": dense_init(ks[5], h * m.v_head_dim, d, dtype)
+        .reshape(h, m.v_head_dim, d),
+    }
+    return params
+
+
+def mla_apply(
+    params,
+    x,  # [B, S, D]
+    cfg: ModelConfig,
+    positions,
+    cache: dict | None = None,  # {"latent":[B,T,R], "krope":[B,T,rd], "len"}
+    causal: bool = True,
+):
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])  # [B,S,R]
+    krope = jnp.einsum("bsd,dr->bsr", x, params["w_krope"])[:, :, None, :]
+    krope = apply_rope(krope, positions, cfg.rope_theta)[:, :, 0]  # [B,S,rd]
+
+    if cache is not None:
+        start = cache["len"]
+        latent_all = jax.lax.dynamic_update_slice(
+            cache["latent"], latent.astype(cache["latent"].dtype), (0, start, 0)
+        )
+        krope_all = jax.lax.dynamic_update_slice(
+            cache["krope"], krope.astype(cache["krope"].dtype), (0, start, 0)
+        )
+        t = latent_all.shape[1]
+        new_cache = {"latent": latent_all, "krope": krope_all, "len": start + s}
+        kpos = jnp.arange(t)[None, None, :]
+        mask = kpos < (start + s)
+        if causal:
+            mask &= kpos <= positions[:, :, None]
+    else:
+        latent_all, krope_all = latent, krope
+        t = s
+        new_cache = None
+        if causal:
+            mask = jnp.arange(t)[None, None, :] <= positions[:, :, None]
+        else:
+            mask = jnp.ones((b, s, t), bool)
+
+    # absorbed attention: score = q_nope·(W_uk·latent) + q_rope·k_rope
+    #   fold W_uk into q (the "weight absorption" trick): q_lat [B,S,H,R]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])
+    logits = jnp.einsum("bshr,btr->bhst", q_lat, latent_all).astype(jnp.float32)
+    logits += jnp.einsum("bshk,btk->bhst", q_rope, krope_all).astype(jnp.float32)
+    logits /= np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    logits += jnp.where(mask[:, None], 0.0, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    # values from latent, absorbed into the output projection side
+    ctx = jnp.einsum("bhst,btr->bshr", probs, latent_all)  # [B,S,H,R]
+    v_ctx = jnp.einsum("bshr,rhk->bshk", ctx, params["w_uv"])  # [B,S,H,vd]
+    y = jnp.einsum("bshk,hkd->bsd", v_ctx, params["wo"])
+    return y, new_cache
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m: MLAConfig = cfg.mla
+    return {
+        "latent": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        "len": jnp.int32(0),
+    }

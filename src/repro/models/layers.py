@@ -1,0 +1,138 @@
+"""Core layers (pure JAX, dict-param style — no flax/optax available offline).
+
+Parameters live in nested dicts of jnp arrays.  Every init function takes a
+PRNG key and returns its param subtree; every apply function takes (params,
+inputs).  Layer-stacked variants (for scan-over-layers) are produced by
+stacking each leaf along a new leading axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(cfg_dtype: str):
+    return jnp.bfloat16 if cfg_dtype == "bfloat16" else jnp.float32
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embeddings
+# --------------------------------------------------------------------------- #
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Feed-forward blocks
+# --------------------------------------------------------------------------- #
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, params["w_gate"]))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", g * u, params["w_down"])
+
+
+def relu2_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def relu2(params, x):
+    """Squared-ReLU MLP (Nemotron-4)."""
+    h = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jnp.square(jax.nn.relu(h))
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+gelu_init = relu2_init  # same two-matrix shape
+
+
+def gelu_mlp(params, x):
+    """Standard GELU MLP (HuBERT / classic encoder stacks)."""
+    h = jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(h), params["w_down"])
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / head
+# --------------------------------------------------------------------------- #
+
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.bfloat16):
+    return {"table": dense_init(key, vocab, d_model, dtype, scale=1.0)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    return jnp.einsum("...d,vd->...v", x, params["table"])
+
+
+def head_init(key, d_model: int, vocab: int, dtype=jnp.bfloat16):
+    return {"w": dense_init(key, d_model, vocab, dtype)}
+
+
+def head(params, x):
+    return jnp.einsum("...d,dv->...v", x, params["w"])
+
+
+# --------------------------------------------------------------------------- #
+# Param-tree utilities (scan stacking)
+# --------------------------------------------------------------------------- #
+
+
+def stack_trees(trees: list):
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_size(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

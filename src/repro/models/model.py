@@ -1,0 +1,331 @@
+"""Model assembly: composable blocks, scan-over-layers, LM head, loss, decode.
+
+The layer stack is grouped into scan units of ``cfg.scan_period`` blocks;
+parameters (and KV caches) are stacked along a leading ``num_scan_steps`` axis
+and the stack is traversed with ``jax.lax.scan`` — HLO stays O(period), which
+keeps 96-layer × 512-device lowering tractable and is the production norm.
+``remat_policy`` wraps the scan body in jax.checkpoint.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention, moe as moe_lib, ssm
+from .config import ModelConfig
+from .layers import (
+    embed,
+    embedding_init,
+    head,
+    head_init,
+    rmsnorm,
+    rmsnorm_init,
+    stack_trees,
+    unembed,
+)
+
+_MIXER_INIT = {
+    "gqa": attention.gqa_init,
+    "mla": attention.mla_init,
+    "mamba": ssm.mamba_init,
+    "rwkv6": ssm.rwkv6_tm_init,
+}
+_MIXER_APPLY = {
+    "gqa": attention.gqa_apply,
+    "mla": attention.mla_apply,
+    "mamba": ssm.mamba_apply,
+    "rwkv6": ssm.rwkv6_tm_apply,
+}
+
+
+def _ffn_init(key, kind: str, cfg: ModelConfig, dtype):
+    from .layers import gelu_init, relu2_init, swiglu_init
+
+    if kind == "swiglu":
+        return swiglu_init(key, cfg.d_model, cfg.d_ff, dtype)
+    if kind == "relu2":
+        return relu2_init(key, cfg.d_model, cfg.d_ff, dtype)
+    if kind == "gelu":
+        return gelu_init(key, cfg.d_model, cfg.d_ff, dtype)
+    if kind == "moe":
+        return moe_lib.moe_init(key, cfg, dtype)
+    if kind == "rwkv6_cm":
+        return ssm.rwkv6_cm_init(key, cfg, dtype)
+    if kind == "none":
+        return {}
+    raise ValueError(kind)
+
+
+def _ffn_apply(params, kind: str, x, cfg: ModelConfig, cache):
+    from .layers import gelu_mlp, relu2, swiglu
+
+    if kind == "swiglu":
+        return swiglu(params, x), cache
+    if kind == "relu2":
+        return relu2(params, x), cache
+    if kind == "gelu":
+        return gelu_mlp(params, x), cache
+    if kind == "moe":
+        return moe_lib.moe_apply(params, x, cfg), cache
+    if kind == "rwkv6_cm":
+        return ssm.rwkv6_cm_apply(params, x, cfg, cache)
+    if kind == "none":
+        return jnp.zeros_like(x), cache
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+
+
+def _block_init(key, kinds: tuple[str, str], cfg: ModelConfig, dtype):
+    mixer_kind, ffn_kind = kinds
+    k1, k2 = jax.random.split(key)
+    p = {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "mixer": _MIXER_INIT[mixer_kind](k1, cfg, dtype),
+    }
+    if ffn_kind != "none":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = _ffn_init(k2, ffn_kind, cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    # one stacked tree per position in the scan unit
+    stacks = []
+    for u, kinds in enumerate(cfg.scan_unit):
+        per_step = [
+            _block_init(keys[step * cfg.scan_period + u], kinds, cfg, dtype)
+            for step in range(cfg.num_scan_steps)
+        ]
+        stacks.append(stack_trees(per_step))
+    params: dict[str, Any] = {
+        "embed": embedding_init(keys[-2], cfg.vocab, cfg.d_model, dtype),
+        "blocks": stacks,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = head_init(keys[-1], cfg.d_model, cfg.vocab, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Forward
+# --------------------------------------------------------------------------- #
+
+
+def _apply_block(params, kinds, x, cfg, positions, cache, causal):
+    mixer_kind, ffn_kind = kinds
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    mix_cache = None if cache is None else cache.get("mixer")
+    y, new_mix_cache = _MIXER_APPLY[mixer_kind](
+        params["mixer"], h, cfg, positions=positions, cache=mix_cache, causal=causal
+    )
+    x = x + y
+    new_cache = None
+    if ffn_kind != "none":
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        ffn_cache = None if cache is None else cache.get("ffn")
+        y, new_ffn_cache = _ffn_apply(params["ffn"], ffn_kind, h, cfg, ffn_cache)
+        x = x + y
+        if cache is not None:
+            new_cache = {"mixer": new_mix_cache, "ffn": new_ffn_cache}
+    elif cache is not None:
+        new_cache = {"mixer": new_mix_cache}
+    return x, new_cache
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens=None,  # [B, S] int32 (None for pure-embedding frontends)
+    embeddings=None,  # [B, S_e, D] precomputed frontend embeddings
+    positions=None,
+    cache=None,  # stacked per scan-unit position, leading axis num_scan_steps
+):
+    """Returns (logits [B, S_total, V], new_cache)."""
+    causal = not cfg.encoder_only
+    parts = []
+    if embeddings is not None:
+        parts.append(embeddings)
+    if tokens is not None:
+        parts.append(embed(params["embed"], tokens))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    from repro.dist import ctx as shard_ctx  # no-op unless a mesh ctx is live
+
+    x = shard_ctx.constrain_batch(x)
+
+    def scan_body(x, step_inputs):
+        step_params, step_cache = step_inputs
+        new_caches = []
+        for u, kinds in enumerate(cfg.scan_unit):
+            c = None if step_cache is None else step_cache[u]
+            x, nc = _apply_block(step_params[u], kinds, x, cfg, positions, c, causal)
+            x = shard_ctx.constrain_batch(x)
+            new_caches.append(nc)
+        out_cache = None if step_cache is None else tuple(new_caches)
+        return x, out_cache
+
+    if cfg.remat_policy == "dots":
+        scan_body = jax.checkpoint(
+            scan_body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    elif cfg.remat_policy == "full":
+        scan_body = jax.checkpoint(scan_body)
+
+    xs_params = tuple(params["blocks"])  # each stacked [steps, ...]
+    xs_cache = None if cache is None else tuple(cache)
+    x, new_cache = jax.lax.scan(
+        scan_body, x, (xs_params, xs_cache), unroll=cfg.scan_unroll
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = head(params["head"], x)
+    logits = shard_ctx.constrain_vocab(logits)
+    return logits, (None if cache is None else list(new_cache))
+
+
+# --------------------------------------------------------------------------- #
+# Loss / train objective
+# --------------------------------------------------------------------------- #
+
+
+def lm_loss(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    """Next-token CE for decoders; per-position CE for encoder-only models.
+
+    batch: {"tokens": [B,S]} (+ optional "embeddings", "labels", "mask")."""
+    tokens = batch.get("tokens")
+    embeddings = batch.get("embeddings")
+    logits, _ = forward(params, cfg, tokens=tokens, embeddings=embeddings)
+    if cfg.encoder_only:
+        labels = batch["labels"]
+        valid = jnp.ones(labels.shape, jnp.float32)
+        pred = logits[:, -labels.shape[1] :, :]
+    else:
+        labels = tokens[:, 1:]
+        pred = logits[:, :-1, :]
+        if embeddings is not None:  # frontend prefix carries no LM labels
+            pred = pred[:, embeddings.shape[1] :, :]
+        valid = jnp.ones(labels.shape, jnp.float32)
+        if "mask" in batch:
+            valid = batch["mask"][:, 1:].astype(jnp.float32)
+    # Vocab-sharding-friendly CE: a take_along_axis gather over a sharded
+    # vocab axis makes GSPMD all-gather the full logits (hundreds of GB at
+    # 1M tokens).  One-hot contraction + logsumexp keep every reduction local
+    # to the vocab shard followed by tiny cross-shard psums.
+    from repro.dist import ctx as shard_ctx
+
+    pred32 = pred.astype(jnp.float32)
+    lse = jax.nn.logsumexp(pred32, axis=-1)
+    onehot = jax.nn.one_hot(labels, pred.shape[-1], dtype=jnp.float32)
+    if onehot.ndim == 3:  # keep the V-sized one-hot vocab-sharded like logits
+        onehot = shard_ctx.constrain_vocab(onehot)
+    label_logit = jnp.einsum("...v,...v->...", onehot, pred32)
+    ll = label_logit - lse
+    return -jnp.sum(ll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+# --------------------------------------------------------------------------- #
+# KV-cache init (stacked to match the scan layout)
+# --------------------------------------------------------------------------- #
+
+
+def _block_cache_init(kinds, cfg: ModelConfig, batch: int, max_len: int, dtype):
+    mixer_kind, ffn_kind = kinds
+    if mixer_kind == "gqa":
+        mix = attention.gqa_cache_init(cfg, batch, max_len, dtype)
+    elif mixer_kind == "mla":
+        mix = attention.mla_cache_init(cfg, batch, max_len, dtype)
+    elif mixer_kind == "mamba":
+        mix = ssm.mamba_cache_init(cfg, batch, dtype)
+    elif mixer_kind == "rwkv6":
+        mix = ssm.rwkv6_tm_cache_init(cfg, batch, dtype)
+    else:
+        raise ValueError(mixer_kind)
+    out = {"mixer": mix}
+    if ffn_kind != "none":
+        out["ffn"] = (
+            ssm.rwkv6_cm_cache_init(cfg, batch, dtype)
+            if ffn_kind == "rwkv6_cm"
+            else None
+        )
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    stacks = []
+    for u, kinds in enumerate(cfg.scan_unit):
+        per_step = [
+            _block_cache_init(kinds, cfg, batch, max_len, dtype)
+            for _ in range(cfg.num_scan_steps)
+        ]
+        stacks.append(stack_trees(per_step))
+    return stacks
+
+
+# --------------------------------------------------------------------------- #
+# Serve steps
+# --------------------------------------------------------------------------- #
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, embeddings=None, start=0):
+    """Run the prompt (optional frontend prefix + tokens) through the model.
+
+    ``start``: absolute position of the first token (continuation prefill
+    against a cache that already holds ``start`` tokens, e.g. prefix-DAG
+    tails)."""
+    b = tokens.shape[0]
+    s = tokens.shape[1] + (embeddings.shape[1] if embeddings is not None else 0)
+    positions = start + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    logits, cache = forward(
+        params, cfg, tokens=tokens, embeddings=embeddings,
+        positions=positions, cache=cache,
+    )
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, step_position):
+    """One token per sequence against the cache. token: [B, 1]."""
+    b = token.shape[0]
+    positions = jnp.broadcast_to(step_position, (b, 1)).astype(jnp.int32)
+    logits, cache = forward(
+        params, cfg, tokens=token, positions=positions, cache=cache
+    )
+    return logits[:, -1, :], cache
+
+
+# --------------------------------------------------------------------------- #
+# Analytic parameter counts (roofline MODEL_FLOPS)
+# --------------------------------------------------------------------------- #
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact param count via eval_shape (no allocation).
+
+    active_only: MoE experts counted as top_k (+shared) per layer instead of
+    all experts — the N in MODEL_FLOPS = 6·N_active·D.
+    """
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    if not active_only or cfg.moe is None:
+        return total
+    m = cfg.moe
+    expert_params = 3 * cfg.d_model * m.d_ff_expert  # gate/up/down per expert
+    n_moe_layers = sum(1 for _, f in cfg.layer_pattern if f == "moe")
+    inactive = (m.num_experts - m.top_k) * expert_params * n_moe_layers
+    return total - inactive

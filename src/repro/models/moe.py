@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based sorted dispatch.
+
+Production-style (MaxText-like) implementation with three structural choices
+that the dry-run profiling forced (EXPERIMENTS.md §Perf):
+
+  * GATHER-only dispatch/combine — scatters lowered to ~80GiB u32 index maps
+    ("moe-gather" iteration);
+  * group-local routing — tokens are split into dp-size groups aligned with
+    the data shards; a global argsort permutes tokens across shards and GSPMD
+    all-gathers the full token matrix ("moe-local-dispatch" iteration);
+  * heavy [G,E,C,·] tensors live *outside* vmap with explicit sharding
+    constraints (G over data, E over model = expert parallelism) — under
+    vmap the SPMD partitioner replicated them ("moe-ep-constraint" iteration).
+
+Router in float32, top-k gates renormalized, capacity
+C = ceil(T_group·k/E · capacity_factor), overflow drops (standard).
+Optional always-on shared experts (DeepSeek style) are added densely.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig, MoEConfig
+from .layers import dense_init, swiglu, swiglu_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / np.sqrt(d)
+
+    def expert_bank(k, d_in, d_out):
+        return (
+            jax.random.normal(k, (m.num_experts, d_in, d_out), jnp.float32) * scale
+        ).astype(dtype)
+
+    params = {
+        "router": dense_init(ks[0], d, m.num_experts, jnp.float32),
+        "w_gate": expert_bank(ks[1], d, m.d_ff_expert),
+        "w_up": expert_bank(ks[2], d, m.d_ff_expert),
+        "w_down": expert_bank(ks[3], m.d_ff_expert, d),
+    }
+    if m.num_shared:
+        params["shared"] = swiglu_init(
+            ks[4], d, m.d_ff_expert * m.num_shared, dtype
+        )
+    return params
+
+
+def _route(params, xg, m: MoEConfig, capacity: int):
+    """Per-group routing indices (cheap int/f32 ops, vmapped over G).
+
+    xg: [G, Tg, D] ->
+      take  [G, E, C]   positions into the expert-sorted token axis
+      in_use[G, E, C]   capacity mask
+      slot  [G, Tg*k]   result row per (token, slot) in sorted order
+      inv   [G, Tg*k]   inverse sort permutation
+      sgate [G, Tg*k]   gate per sorted entry (0 when dropped)
+      stok  [G, Tg*k]   token index per sorted entry
+    """
+    g, tg, d = xg.shape
+    tk = tg * m.top_k
+
+    def one(x):
+        logits = jnp.einsum(
+            "td,de->te", x.astype(jnp.float32), params["router"].astype(jnp.float32)
+        )
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+        )
+        flat_expert = expert_idx.reshape(tk)
+        flat_token = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), m.top_k)
+        flat_gate = gate_vals.reshape(tk)
+        order = jnp.argsort(flat_expert, stable=True)
+        se, stok, sgate = flat_expert[order], flat_token[order], flat_gate[order]
+        first = jnp.searchsorted(se, jnp.arange(m.num_experts + 1)).astype(jnp.int32)
+        pos = jnp.arange(tk, dtype=jnp.int32) - first[se]
+        kept = pos < capacity
+        cpos = jnp.arange(capacity, dtype=jnp.int32)
+        take = first[:-1, None] + cpos[None, :]
+        counts = first[1:] - first[:-1]
+        in_use = cpos[None, :] < jnp.minimum(counts, capacity)[:, None]
+        slot = jnp.minimum(se * capacity + pos, m.num_experts * capacity - 1)
+        inv = jnp.argsort(order)
+        return (
+            jnp.minimum(take, tk - 1),
+            in_use,
+            slot,
+            inv,
+            sgate * kept.astype(jnp.float32),
+            stok,
+        )
+
+    return jax.vmap(one)(xg)
+
+
+def moe_apply(params, x, cfg: ModelConfig):
+    """x: [B, S, D] -> [B, S, D]."""
+    from repro.dist import ctx as shard_ctx
+
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    sctx = shard_ctx.current()
+    groups = 1
+    if sctx is not None:
+        gsz = sctx.dp_size()
+        if gsz > 1 and t % gsz == 0 and (t // gsz) >= m.num_experts:
+            groups = gsz
+    tg = t // groups
+    xg = x.reshape(groups, tg, d)
+
+    def cst(arr, spec):
+        if sctx is None:
+            return arr
+        return jax.lax.with_sharding_constraint(arr, NamedSharding(sctx.mesh, spec))
+
+    dp = sctx.dp_axes if sctx else None
+    tp = sctx.tp_axis if sctx else None
+    e_ok = tp is not None and m.num_experts % sctx.mesh.shape[tp] == 0
+    e_ax = tp if e_ok else None
+    xg = cst(xg, P(dp, None, None))
+
+    capacity = int(np.ceil(tg * m.top_k / m.num_experts * m.capacity_factor))
+    take, in_use, slot, inv, sgate, stok = _route(params, xg, m, capacity)
+
+    # heavy tensors: explicit G-indexed einsums, sharded G×data / E×model
+    xs_sorted = jnp.take_along_axis(xg, stok[..., None], axis=1)  # [G,Tk,D]
+    h = jnp.take_along_axis(
+        xs_sorted, take.reshape(groups, -1)[..., None], axis=1
+    ).reshape(groups, m.num_experts, capacity, d)
+    h = h * in_use[..., None].astype(h.dtype)
+    h = cst(h, P(dp, e_ax, None, None))
+
+    gated = jax.nn.silu(jnp.einsum("gecd,edf->gecf", h, params["w_gate"]))
+    up = jnp.einsum("gecd,edf->gecf", h, params["w_up"])
+    out_e = jnp.einsum("gecf,efd->gecd", gated * up, params["w_down"])
+    out_e = cst(out_e, P(dp, e_ax, None, None))
+    out_flat = out_e.reshape(groups, m.num_experts * capacity, d)
+
+    contrib = jnp.take_along_axis(out_flat, slot[..., None], axis=1)
+    contrib = contrib * sgate[..., None].astype(contrib.dtype)
+    y = jnp.take_along_axis(contrib, inv[..., None], axis=1)
+    y = y.reshape(groups, tg, m.top_k, d).sum(axis=2)
+    y = cst(y, P(dp, None, None))
+
+    if m.num_shared:
+        y = y + swiglu(params["shared"], xg.reshape(groups * tg, d)).reshape(
+            groups, tg, d
+        )
+    return y.reshape(b, s, d)

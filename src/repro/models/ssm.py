@@ -1,0 +1,297 @@
+"""State-space / linear-attention mixers: Mamba (S6) and RWKV-6 "Finch".
+
+Both are O(S) in sequence length (the sub-quadratic families that make the
+``long_500k`` decode shape runnable).  Training/prefill uses lax.scan over
+time; decode is a single recurrent step against a fixed-size state — no KV
+growth.
+
+Mamba follows the S6 selective-scan recurrence (discretized zero-order hold):
+    h_t = exp(Δ_t ⊙ A) h_{t-1} + Δ_t B_t x_t ;   y_t = C_t h_t + D x_t
+RWKV-6 implements data-dependent decay (the paper-listed feature):
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t ;  y_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+with per-channel w_t produced by a low-rank adapter from the shifted input.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, SSMConfig
+from .layers import dense_init
+
+
+# --------------------------------------------------------------------------- #
+# Mamba (S6)
+# --------------------------------------------------------------------------- #
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    s: SSMConfig = cfg.ssm
+    return s.dt_rank if s.dt_rank else max(1, int(np.ceil(cfg.d_model / 16)))
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    e = s.expand * d
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 7)
+    a_init = jnp.broadcast_to(
+        jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (e, s.d_state)
+    )
+    return {
+        "w_in": dense_init(ks[0], d, 2 * e, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, e), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((e,), dtype),
+        "w_x": dense_init(ks[2], e, r + 2 * s.d_state, dtype),
+        "w_dt": dense_init(ks[3], r, e, dtype),
+        "dt_bias": jnp.zeros((e,), jnp.float32),
+        "a_log": jnp.log(a_init),  # [E, N] float32
+        "d_skip": jnp.ones((e,), jnp.float32),
+        "w_out": dense_init(ks[4], e, d, dtype),
+    }
+
+
+def _mamba_scan(params, xe, cfg: ModelConfig, h0):
+    """xe: [B, S, E] post-conv activations; h0: [B, E, N] initial state.
+
+    The discretized operands are formed *inside* the time step: materializing
+    `exp(Δ·A)` / `Δ·B·x` for all timesteps costs S·E·N floats (tens of TB per
+    device at Jamba scale — §Perf "mamba-fused-step" iteration); per-step
+    outer products keep the transient state-sized.  ``ssm.time_chunk`` > 0
+    additionally remats the recurrence in chunks so the backward pass stores
+    S/chunk carries instead of S.
+    """
+    s_cfg: SSMConfig = cfg.ssm
+    r = _dt_rank(cfg)
+    proj = jnp.einsum("bse,ef->bsf", xe, params["w_x"])
+    dt_in, bmat, cmat = jnp.split(proj, [r, r + s_cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )  # [B,S,E]
+    a = -jnp.exp(params["a_log"])  # [E,N]
+
+    def step(h, inputs):
+        dt_t, b_t, c_t, xe_t = inputs  # [B,E], [B,N], [B,N], [B,E]
+        # per-step upcast: streaming [B,S,E] f32 copies through HBM cost
+        # ~14TB/unit (§Perf "ssm-bf16-stream"); the f32 math happens on
+        # state-sized transients only, the state itself stays f32
+        dt32 = dt_t.astype(jnp.float32)
+        da_t = jnp.exp(dt32[..., None] * a)  # [B,E,N] transient
+        h = da_t * h + (dt32 * xe_t.astype(jnp.float32))[..., None] * b_t.astype(
+            jnp.float32
+        )[:, None, :]
+        y = jnp.einsum("ben,bn->be", h, c_t.astype(jnp.float32))
+        return h, y
+
+    stream_dtype = xe.dtype
+    xs = (
+        jnp.moveaxis(dt.astype(stream_dtype), 1, 0),
+        jnp.moveaxis(bmat, 1, 0),
+        jnp.moveaxis(cmat, 1, 0),
+        jnp.moveaxis(xe, 1, 0),
+    )
+    chunk = getattr(s_cfg, "time_chunk", 0)
+    s_len = xe.shape[1]
+    if chunk and s_len > chunk and s_len % chunk == 0:
+        n_chunks = s_len // chunk
+
+        @jax.checkpoint
+        def chunk_body(h, chunk_xs):
+            return jax.lax.scan(step, h, chunk_xs)
+
+        xs_c = jax.tree.map(
+            lambda t: t.reshape((n_chunks, chunk) + t.shape[1:]), xs
+        )
+        h_last, ys = jax.lax.scan(chunk_body, h0, xs_c)
+        ys = ys.reshape((s_len,) + ys.shape[2:])
+    else:
+        h_last, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # [B,S,E]
+    y = y + params["d_skip"] * xe.astype(jnp.float32)
+    return y.astype(xe.dtype), h_last
+
+
+def mamba_apply(params, x, cfg: ModelConfig, positions=None, cache=None, causal=True):
+    """x: [B,S,D]; cache: {"h":[B,E,N], "conv":[B,d_conv-1,E]} for decode."""
+    s_cfg: SSMConfig = cfg.ssm
+    b, s, d = x.shape
+    e = s_cfg.expand * d
+    xz = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    xe, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over time
+    if cache is not None:
+        conv_in = jnp.concatenate([cache["conv"], xe], axis=1)
+        new_conv = conv_in[:, -(s_cfg.d_conv - 1) :, :]
+        h0 = cache["h"]
+    else:
+        conv_in = jnp.pad(xe, ((0, 0), (s_cfg.d_conv - 1, 0), (0, 0)))
+        new_conv = conv_in[:, -(s_cfg.d_conv - 1) :, :]
+        h0 = jnp.zeros((b, e, s_cfg.d_state), jnp.float32)
+    xc = sum(
+        conv_in[:, i : i + s, :] * params["conv_w"][i][None, None, :]
+        for i in range(s_cfg.d_conv)
+    ) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    y, h_last = _mamba_scan(params, xc, cfg, h0)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_last, "conv": new_conv}
+    return out, new_cache
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s: SSMConfig = cfg.ssm
+    e = s.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, e, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, e), dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# RWKV-6 (Finch): time mixing with data-dependent decay + channel mixing
+# --------------------------------------------------------------------------- #
+
+_MIX_DIM = 32
+_DECAY_DIM = 64
+
+
+def rwkv6_tm_init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        # ddlerp token-shift mixers (r, k, v, w, g)
+        "mu": (jax.random.normal(ks[0], (5, d), jnp.float32) * 0.02).astype(dtype),
+        "mu_x": (jax.random.normal(ks[1], (d,), jnp.float32) * 0.02).astype(dtype),
+        "lora_a": dense_init(ks[2], d, 5 * _MIX_DIM, dtype),
+        "lora_b": (jax.random.normal(ks[3], (5, _MIX_DIM, d), jnp.float32) * 0.02).astype(dtype),
+        "wr": dense_init(ks[4], d, h * hd, dtype).reshape(d, h, hd),
+        "wk": dense_init(ks[5], d, h * hd, dtype).reshape(d, h, hd),
+        "wv": dense_init(ks[6], d, h * hd, dtype).reshape(d, h, hd),
+        "wg": dense_init(ks[7], d, h * hd, dtype).reshape(d, h, hd),
+        "w0": jnp.zeros((h, hd), jnp.float32) - 6.0,  # base decay (slow)
+        "wlora_a": dense_init(ks[8], d, _DECAY_DIM, dtype),
+        "wlora_b": dense_init(ks[9], _DECAY_DIM, h * hd, dtype).reshape(
+            _DECAY_DIM, h, hd
+        ),
+        "u_bonus": jnp.zeros((h, hd), jnp.float32),
+        "ln_out": {"scale": jnp.ones((h * hd,), dtype)},
+        "wo": dense_init(ks[10], h * hd, d, dtype),
+    }
+
+
+def _token_shift(x, last):
+    """shift right by one along S; position 0 takes ``last`` ([B, D])."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv6_tm_apply(params, x, cfg: ModelConfig, positions=None, cache=None, causal=True):
+    """x: [B,S,D]; cache: {"s":[B,H,hd,hd] f32, "last":[B,D]}."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    last = cache["last"] if cache is not None else jnp.zeros((b, d), x.dtype)
+    xprev = _token_shift(x, last)
+    dx = xprev - x
+    # ddlerp: data-dependent interpolation weights per stream
+    xx = x + dx * params["mu_x"]
+    lora = jnp.tanh(jnp.einsum("bsd,df->bsf", xx, params["lora_a"]))
+    lora = lora.reshape(b, s, 5, _MIX_DIM)
+    dyn = jnp.einsum("bsfm,fmd->bsfd", lora, params["lora_b"])  # [B,S,5,D]
+    mixed = x[:, :, None, :] + dx[:, :, None, :] * (
+        params["mu"][None, None] + dyn
+    )  # [B,S,5,D]
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("bsd,dhk->bshk", xr, params["wr"])
+    k = jnp.einsum("bsd,dhk->bshk", xk, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xv, params["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", xg, params["wg"]))
+    # data-dependent decay (the Finch contribution)
+    wl = jnp.tanh(jnp.einsum("bsd,df->bsf", xw, params["wlora_a"]))
+    wraw = params["w0"][None, None] + jnp.einsum(
+        "bsf,fhk->bshk", wl, params["wlora_b"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wraw))  # [B,S,H,hd] in (0,1)
+
+    u = params["u_bonus"][None]  # [1,H,hd]
+    s0 = (
+        cache["s"]
+        if cache is not None
+        else jnp.zeros((b, h, hd, hd), jnp.float32)
+    )
+
+    def step(state, inputs):
+        r_t, k_t, v_t, w_t = inputs  # [B,H,hd] each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # [B,H,hd,hd]
+        y = jnp.einsum(
+            "bhk,bhkv->bhv", r_t, state + u[..., None] * kv
+        )  # [B,H,hd]
+        state = w_t[..., None] * state + kv
+        return state, y
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0)
+        for t in (
+            r.astype(jnp.float32),
+            k.astype(jnp.float32),
+            v.astype(jnp.float32),
+            w,
+        )
+    )
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h * hd)  # [B,S,H*hd]
+    # group-norm-ish output norm then gate
+    y32 = y.astype(jnp.float32).reshape(b, s, h, hd)
+    y32 = y32 * jax.lax.rsqrt(jnp.mean(jnp.square(y32), -1, keepdims=True) + 1e-5)
+    y = (y32.reshape(b, s, h * hd) * params["ln_out"]["scale"].astype(jnp.float32)).astype(x.dtype)
+    y = y * g.reshape(b, s, h * hd)
+    out = jnp.einsum("bsf,fd->bsd", y, params["wo"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"s": s_last, "last": x[:, -1, :]}
+    return out, new_cache
+
+
+def rwkv6_cm_init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": (jax.random.normal(ks[0], (d,), jnp.float32) * 0.02).astype(dtype),
+        "mu_r": (jax.random.normal(ks[1], (d,), jnp.float32) * 0.02).astype(dtype),
+        "wk": dense_init(ks[0], d, f, dtype),
+        "wv": dense_init(ks[1], f, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def rwkv6_cm_apply(params, x, cfg: ModelConfig, cache=None):
+    """Channel mixing; cache: {"last": [B, D]}."""
+    b, s, d = x.shape
+    last = cache["last"] if cache is not None else jnp.zeros((b, d), x.dtype)
+    xprev = _token_shift(x, last)
+    dx = xprev - x
+    xk = x + dx * params["mu_k"]
+    xr = x + dx * params["mu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, params["wk"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, params["wv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["wr"])) * kv
+    new_cache = {"last": x[:, -1, :]} if cache is not None else None
+    return out, new_cache
+
+
+def rwkv6_tm_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "s": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32),
+        "last": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv6_cm_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {"last": jnp.zeros((batch, cfg.d_model), dtype)}

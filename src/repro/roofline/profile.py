@@ -1,0 +1,39 @@
+"""HLO-text profiling: bucket per-op result bytes by op kind.
+
+The dry-run's only "profiler" is the compiled HLO (no hardware): this module
+turns it into a rough traffic breakdown — which op families write the bytes —
+so hillclimb hypotheses are data-driven (write-bytes is a good proxy for HBM
+traffic at CPU-fusion granularity; reads roughly mirror writes at this
+altitude).
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+from .analysis import _SHAPE_RE, _DTYPE_BYTES, _shape_bytes
+
+_OP_RE = re.compile(r"^[%\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def traffic_by_op(hlo_text: str, top: int = 12) -> list[tuple[str, int]]:
+    buckets: Counter[str] = Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line.strip())
+        if not m:
+            continue
+        shape, op = m.group(1), m.group(2)
+        op = re.sub(r"\.\d+$", "", op)
+        buckets[op] += _shape_bytes(shape)
+    return buckets.most_common(top)
+
+
+def biggest_ops(hlo_text: str, top: int = 12) -> list[tuple[int, str, str]]:
+    rows = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line.strip())
+        if not m:
+            continue
+        rows.append((_shape_bytes(m.group(1)), m.group(2), m.group(1)[:80]))
+    rows.sort(reverse=True)
+    return rows[:top]

@@ -1,0 +1,3 @@
+from .prefix_dag import PrefixDAG, plan_batch
+
+__all__ = ["PrefixDAG", "plan_batch"]

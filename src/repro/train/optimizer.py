@@ -1,0 +1,164 @@
+"""Optimizers from scratch (no optax offline): AdamW and Adafactor.
+
+Both operate on arbitrary param pytrees and keep their states sharded exactly
+like the parameters (the tree structure mirrors params, so the same
+PartitionSpecs apply — what FSDP needs).
+
+AdamW keeps fp32 moments (robust default up to ~30B params on a pod);
+Adafactor keeps factored second moments only (rank-1 row/col statistics),
+the standard choice for the 340B/400B configs on 16GB/chip hardware.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# --------------------------------------------------------------------------- #
+# AdamW
+# --------------------------------------------------------------------------- #
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    params,
+    grads,
+    state: dict,
+    lr: float | jnp.ndarray = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        new_p = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": tdef.unflatten([o[1] for o in out]),
+        "v": tdef.unflatten([o[2] for o in out]),
+        "count": count,
+    }
+    return new_params, new_state
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (factored second moments; memory ~ params/row+col)
+# --------------------------------------------------------------------------- #
+
+
+def adafactor_init(params) -> dict:
+    def stats(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"stats": jax.tree.map(stats, params, is_leaf=lambda x: hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(
+    params,
+    grads,
+    state: dict,
+    lr: float | jnp.ndarray = 1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+):
+    count = state["count"] + 1
+    beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+    def upd(p, g, s):
+        g32 = jnp.square(g.astype(jnp.float32)) + eps
+        if p.ndim >= 2:
+            vr = beta * s["vr"] + (1 - beta) * jnp.mean(g32, axis=-1)
+            vc = beta * s["vc"] + (1 - beta) * jnp.mean(g32, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            precond = (
+                vr[..., None] / denom[..., None] * vc[..., None, :]
+            )
+            update = g.astype(jnp.float32) * jax.lax.rsqrt(precond + eps)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["v"] + (1 - beta) * g32
+            update = g.astype(jnp.float32) * jax.lax.rsqrt(v + eps)
+            new_s = {"v": v}
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + eps)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        new_p = p.astype(jnp.float32) - lr * (
+            update + weight_decay * p.astype(jnp.float32)
+        )
+        return new_p.astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["stats"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {"stats": tdef.unflatten([o[1] for o in out]), "count": count}
+    return new_params, new_state
+
+
+# --------------------------------------------------------------------------- #
+# Schedules
+# --------------------------------------------------------------------------- #
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = base_lr * step / jnp.maximum(1.0, warmup)
+    progress = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+}
+
+
+def pick_optimizer(cfg) -> str:
+    """Adafactor for >=100B-param configs (16GB/chip budget), else AdamW."""
+    return "adafactor" if cfg.param_count() >= 100e9 else "adamw"

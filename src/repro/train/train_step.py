@@ -1,0 +1,93 @@
+"""Train step: loss -> grads (with microbatch accumulation) -> optimizer.
+
+``make_train_step`` builds the jit-able step for one architecture:
+  * bf16 activations, fp32 softmax/loss, fp32 optimizer moments;
+  * gradient accumulation over ``microbatches`` via lax.scan (the global
+    batch dim is split, keeping peak activation memory ~1/microbatches);
+  * global-norm clipping;
+  * optional int8 gradient compression across the data/pod axes (see
+    dist/collectives.py) — off by default, evaluated in EXPERIMENTS.md §Perf.
+
+The returned step has signature (state, batch) -> (state, metrics) where
+state = {"params", "opt", "step"} and is donate-able.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, lm_loss
+from repro.train.optimizer import (
+    OPTIMIZERS,
+    clip_by_global_norm,
+    cosine_schedule,
+    pick_optimizer,
+)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: str | None = None,
+    microbatches: int = 1,
+    base_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    max_grad_norm: float = 1.0,
+) -> tuple[Callable, Callable]:
+    """Returns (init_state, train_step)."""
+    opt_name = optimizer or pick_optimizer(cfg)
+    opt_init, opt_update = OPTIMIZERS[opt_name]
+
+    def init_state(params):
+        return {
+            "params": params,
+            "opt": opt_init(params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: lm_loss(p, cfg, batch))(params)
+
+    def accumulate(params, batch):
+        if microbatches <= 1:
+            return grads_of(params, batch)
+        split = jax.tree.map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:]),
+            batch,
+        )
+
+        def body(acc, mb):
+            loss, g = grads_of(params, mb)
+            acc_loss, acc_g = acc
+            return (
+                acc_loss + loss / microbatches,
+                jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / microbatches, acc_g, g
+                ),
+            ), None
+
+        zero = (
+            jnp.zeros((), jnp.float32),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        )
+        (loss, grads), _ = jax.lax.scan(body, zero, split)
+        return loss, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        loss, grads = accumulate(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = cosine_schedule(state["step"], base_lr, warmup, total_steps)
+        new_params, new_opt = opt_update(params, grads, state["opt"], lr=lr)
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return init_state, train_step

@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step.
+
+Each assigned arch is instantiated at a smoke scale (same family / layer
+pattern / expert & MLA structure, small dims) and must produce finite loss,
+correct logits shapes, and a working decode step (where applicable).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, cell_applicable
+from repro.models import init_cache, init_params, lm_loss, prefill, decode_step
+from repro.train.optimizer import adamw_init, adamw_update
+
+ARCHS = sorted(CONFIGS)
+
+
+def _smoke_batch(cfg, b=2, s=32):
+    key = jax.random.key(7)
+    if cfg.encoder_only:
+        return {
+            "embeddings": jax.random.normal(key, (b, s, cfg.d_model), jnp.bfloat16),
+            "labels": jax.random.randint(jax.random.key(8), (b, s), 0, cfg.vocab),
+        }
+    if cfg.frontend != "none":
+        return {
+            "embeddings": jax.random.normal(key, (b, 8, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.random.randint(jax.random.key(8), (b, s - 8), 0, cfg.vocab),
+        }
+    return {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = CONFIGS[arch].reduced()
+    params = init_params(jax.random.key(0), cfg)
+    batch = _smoke_batch(cfg)
+
+    loss_fn = jax.jit(lambda p, b: lm_loss(p, cfg, b))
+    loss = loss_fn(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    assert float(loss) > 0
+
+    # one SGD-ish step via our AdamW: loss must stay finite and change
+    grads = jax.jit(jax.grad(lambda p, b: lm_loss(p, cfg, b)))(params, batch)
+    for leaf in jax.tree.leaves(grads):
+        assert jnp.isfinite(leaf).all(), f"{arch}: non-finite grads"
+    state = adamw_init(params)
+    params2, _ = adamw_update(params, grads, state, lr=1e-3)
+    loss2 = loss_fn(params2, batch)
+    assert jnp.isfinite(loss2), f"{arch}: non-finite post-step loss"
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch):
+    """Token-by-token decode must agree with a single prefill pass."""
+    cfg = CONFIGS[arch].reduced()
+    if cfg.encoder_only:
+        pytest.skip("encoder-only: no decode")
+    if cfg.frontend != "none":
+        pytest.skip("frontend archs covered by forward test; decode is text-only")
+    b, s = 2, 12
+    params = init_params(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab)
+
+    from repro.models.model import forward
+
+    full_logits, _ = jax.jit(lambda p, t: forward(p, cfg, tokens=t))(params, tokens)
+
+    cache = init_cache(cfg, b, s + 4)
+    last, cache = prefill(params, cfg, tokens[:, :-1], cache)
+    np.testing.assert_allclose(
+        np.asarray(last, np.float32),
+        np.asarray(full_logits[:, -2, :], np.float32),
+        rtol=0.15, atol=0.15,
+    )
+    nxt, cache = decode_step(params, cfg, tokens[:, -1:], cache, jnp.int32(s - 1))
+    np.testing.assert_allclose(
+        np.asarray(nxt, np.float32),
+        np.asarray(full_logits[:, -1, :], np.float32),
+        rtol=0.15, atol=0.15,
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cell_applicability(arch):
+    cfg = CONFIGS[arch]
+    ok, reason = cell_applicable(cfg, "long_500k")
+    assert ok == cfg.sub_quadratic or (not ok and reason)
+    ok, _ = cell_applicable(cfg, "train_4k")
+    assert ok
+    if cfg.encoder_only:
+        assert not cell_applicable(cfg, "decode_32k")[0]

@@ -1,0 +1,25 @@
+"""Cross-query batched DAG search == per-query results (all 9 paper queries)."""
+import numpy as np
+
+from repro.core import KeywordSearchEngine
+from repro.data import QUERIES, generate_discogs_tree
+
+
+def test_query_batch_matches_individual():
+    tree = generate_discogs_tree(n_releases=150, seed=9)
+    eng = KeywordSearchEngine(tree)
+    queries = [kws for _, kws in QUERIES.values()]
+    for sem in ("slca", "elca"):
+        batched = eng.query_batch(queries, semantics=sem)
+        assert eng.last_stats.data["launches"] <= eng.last_stats.data["rounds"] * 3
+        for q, got in zip(queries, batched):
+            want = eng.query(q, semantics=sem, index="dag", backend="scalar")
+            np.testing.assert_array_equal(got, want, err_msg=f"{q} {sem}")
+
+
+def test_query_batch_handles_unknown_keywords():
+    tree = generate_discogs_tree(n_releases=30, seed=1)
+    eng = KeywordSearchEngine(tree)
+    res = eng.query_batch([["vinyl"], ["zzz-not-a-word"], ["description", "rpm"]])
+    assert res[1].size == 0
+    assert res[0].size > 0

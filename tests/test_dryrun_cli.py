@@ -1,0 +1,50 @@
+"""The dry-run CLI end-to-end in a subprocess (512 placeholder devices).
+
+Covers: XLA_FLAGS bootstrap ordering, production mesh construction, lowering
++ compiling a real cell on 256 fake chips, JSON record output.  Uses the
+smallest arch to keep compile time test-friendly.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.parametrize("shape", ["decode_32k"])
+def test_dryrun_cli_smollm(tmp_path, shape):
+    out = tmp_path / "rec.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "smollm-135m", "--shape", shape,
+            "--no-accounting", "--out", str(out),
+        ],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    recs = json.load(open(out))
+    assert len(recs) == 1 and recs[0]["ok"]
+    assert recs[0]["mesh"] == "16x16" and recs[0]["chips"] == 256
+    assert recs[0]["memory"]["argument_bytes"] > 0
+
+
+def test_dryrun_skip_reporting(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "hubert-xlarge", "--shape", "decode_32k",
+        ],
+        capture_output=True, text=True, timeout=300, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SKIP" in proc.stdout and "encoder-only" in proc.stdout

@@ -1,0 +1,180 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp ref oracles.
+
+Every kernel is swept over shapes (including non-multiples of the block size,
+empty-ish and skewed inputs) and validated with exact equality (int kernels).
+Hypothesis drives randomized sorted inputs.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.intersect import membership_pallas_call
+from repro.kernels.searchsorted import searchsorted_pallas_call
+from repro.kernels.elca_segsum import elca_segsum_pallas_call
+
+INT_PAD = np.int32(2**31 - 1)
+
+
+def sorted_unique(rng, n, hi=10**6):
+    if n == 0:
+        return np.zeros(0, dtype=np.int32)
+    return np.unique(rng.integers(0, hi, size=n).astype(np.int32))
+
+
+# --------------------------------------------------------------------------- #
+# intersect (membership)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("na,nq,block", [
+    (1000, 100, 128),
+    (100, 1000, 128),
+    (4096, 512, 512),
+    (513, 511, 128),
+    (1, 1, 128),
+    (5000, 5000, 256),
+])
+def test_membership_shapes(na, nq, block):
+    rng = np.random.default_rng(na * 7919 + nq)
+    a = sorted_unique(rng, na)
+    # queries: mix of members and non-members, sorted
+    q = np.unique(
+        np.concatenate([
+            rng.choice(a, size=min(nq, a.size), replace=False),
+            rng.integers(0, 10**6, size=nq).astype(np.int32),
+        ])
+    )[:nq]
+    found, pos = ops.intersect_membership(a, q, bq=block, ba=block)
+    exp = np.isin(q, a)
+    np.testing.assert_array_equal(found, exp)
+    # positions must index the matching element
+    np.testing.assert_array_equal(a[pos[found]], q[found])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 2000), st.integers(1, 2000))
+def test_membership_property(seed, na, nq):
+    rng = np.random.default_rng(seed)
+    a = sorted_unique(rng, na, hi=5000)  # dense range => many collisions
+    if a.size == 0:
+        return
+    q = np.unique(rng.integers(0, 5000, size=nq).astype(np.int32))
+    found, pos = ops.intersect_membership(a, q, bq=128, ba=128)
+    np.testing.assert_array_equal(found, np.isin(q, a))
+    np.testing.assert_array_equal(a[pos[found]], q[found])
+
+
+def test_membership_skewed_window():
+    # huge run of A between two adjacent queries: forces a wide window
+    a = np.arange(0, 100000, dtype=np.int32)
+    q = np.asarray([5, 99999], dtype=np.int32)
+    found, pos = ops.intersect_membership(a, q, bq=128, ba=128)
+    assert found.all()
+    np.testing.assert_array_equal(a[pos], q)
+
+
+def test_membership_matches_ref_padded():
+    rng = np.random.default_rng(0)
+    a = sorted_unique(rng, 700)
+    q = sorted_unique(rng, 300)
+    ap = ops._pad_to(a, 128, INT_PAD)
+    qp = ops._pad_to(q, 128, INT_PAD)
+    f_ref, p_ref = ref.membership_ref(ap, qp)
+    f, p = ops.intersect_membership(a, q, bq=128, ba=128)
+    np.testing.assert_array_equal(f, np.asarray(f_ref)[: q.size])
+    got = np.asarray(p)[f]
+    want = np.asarray(p_ref)[: q.size][f]
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------- #
+# searchsorted (count-based)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("na,nq", [(1000, 100), (37, 513), (2048, 2048), (1, 7)])
+def test_searchsorted_shapes(na, nq):
+    rng = np.random.default_rng(na + nq)
+    a = sorted_unique(rng, na, hi=10**5)
+    q = rng.integers(0, 10**5, size=nq).astype(np.int32)
+    got = ops.searchsorted_positions(a, q, bq=128, ba=128)
+    want = np.searchsorted(a, q, side="left")
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_searchsorted_property(seed):
+    rng = np.random.default_rng(seed)
+    a = sorted_unique(rng, int(rng.integers(1, 1500)), hi=3000)
+    q = rng.integers(-5, 3005, size=int(rng.integers(1, 1500))).astype(np.int32)
+    got = ops.searchsorted_positions(a, q, bq=256, ba=256)
+    np.testing.assert_array_equal(got, np.searchsorted(a, q, side="left"))
+
+
+# --------------------------------------------------------------------------- #
+# elca_segsum (masked mat-sum scatter replacement)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("m,k", [(100, 2), (513, 3), (1024, 4), (3, 2)])
+def test_elca_segsum_shapes(m, k):
+    rng = np.random.default_rng(m * k)
+    ca = sorted_unique(rng, m, hi=10**6)
+    m = ca.size
+    # parents: each entry points at a random earlier CA or -1
+    par = np.where(
+        rng.random(m) < 0.8,
+        ca[rng.integers(0, m, size=m)],
+        -1,
+    ).astype(np.int32)
+    nd = rng.integers(1, 100, size=(k, m)).astype(np.int32)
+    got = ops.elca_child_sums(ca, par, nd, bi=128, bj=128)
+    want = np.zeros((k, m), dtype=np.int64)
+    for j in range(m):
+        if par[j] >= 0:
+            i = np.searchsorted(ca, par[j])
+            if i < m and ca[i] == par[j]:
+                want[:, i] += nd[:, j]
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 600), st.integers(2, 4))
+def test_elca_segsum_property(seed, m, k):
+    rng = np.random.default_rng(seed)
+    ca = sorted_unique(rng, m, hi=5000)
+    m = ca.size
+    par = np.where(
+        rng.random(m) < 0.7, ca[rng.integers(0, m, size=m)], -1
+    ).astype(np.int32)
+    nd = rng.integers(0, 50, size=(k, m)).astype(np.int32)
+    got = ops.elca_child_sums(ca, par, nd, bi=256, bj=256)
+    want = np.asarray(
+        ref.elca_segsum_ref(
+            ops._pad_to(ca, 256, INT_PAD),
+            ops._pad_to(par, 256, -1),
+            ops._pad_to(nd, 256, 0),
+        )
+    )[:, :m]
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: pallas backend == scalar backend == jax backend
+# --------------------------------------------------------------------------- #
+
+
+def test_pallas_query_end_to_end():
+    from repro.core import KeywordSearchEngine
+    from repro.data import generate_discogs_tree, QUERIES
+
+    tree = generate_discogs_tree(n_releases=60, seed=3)
+    eng = KeywordSearchEngine(tree)
+    for q, (cat, kws) in QUERIES.items():
+        for sem in ("slca", "elca"):
+            want = eng.query(kws, semantics=sem, index="tree", backend="scalar")
+            for index in ("tree", "dag"):
+                got = eng.query(kws, semantics=sem, index=index, backend="pallas")
+                np.testing.assert_array_equal(got, want, err_msg=f"{q} {sem} {index}")

@@ -1,0 +1,220 @@
+"""The paper's running example (Fig. 1-5) as an executable specification.
+
+Fig. 1 reconstruction (ids are 1-based in the paper; 0-based here):
+
+  1 bib
+    2 release
+      3 title "Thriller"
+      4 versions
+        5 release-details
+          6 format "Vinyl"
+          7 country "USA"
+          8 language "English"
+      9 note "USA"
+      10 note2 "English"
+    11 release2
+      12 release-details          (identical to 5's subtree)
+        13 format "Vinyl"
+        14 country "USA"
+        15 language "English"
+
+Expected (paper §II-B): CA = {1,2,4,5,11,12}, SLCA = {5,12},
+ELCA = {2,5,12}; after compression node 12 is deleted (≡ 5, offset +7),
+RC1 = {5,6,7,8} with OccurrenceCount 2.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    KeywordSearchEngine,
+    NodeSpec,
+    build_tree,
+    build_indices,
+    compress,
+)
+from repro.core import brute, search_base
+
+
+def paper_tree():
+    rd = lambda: NodeSpec(
+        "release-details",
+        children=[
+            NodeSpec("format", "Vinyl"),
+            NodeSpec("country", "USA"),
+            NodeSpec("language", "English"),
+        ],
+    )
+    root = NodeSpec(
+        "bib",
+        children=[
+            NodeSpec(
+                "release",
+                children=[
+                    NodeSpec("title", "Thriller"),
+                    NodeSpec("versions", children=[rd()]),
+                    NodeSpec("note", "USA"),
+                    NodeSpec("note2", "English"),
+                ],
+            ),
+            NodeSpec("release2", children=[rd()]),
+        ],
+    )
+    return build_tree(root)
+
+
+# paper ids are 1-based; our ids are 0-based
+P = lambda *ids: np.asarray([i - 1 for i in ids], dtype=np.int64)
+
+
+@pytest.fixture(scope="module")
+def tree():
+    t = paper_tree()
+    t.validate()
+    return t
+
+
+@pytest.fixture(scope="module")
+def engine(tree):
+    return KeywordSearchEngine(tree)
+
+
+def kw(tree, *words):
+    return [tree.vocab.get(w) for w in words]
+
+
+def test_idlists_match_fig2(tree):
+    base, _ = build_indices(tree)
+    l_usa = base.idlist(tree.vocab.get("USA"))
+    np.testing.assert_array_equal(l_usa.ids, P(1, 2, 4, 5, 7, 9, 11, 12, 14))
+    np.testing.assert_array_equal(
+        l_usa.pidpos, np.asarray([-1, 0, 1, 2, 3, 1, 0, 6, 7])
+    )
+    np.testing.assert_array_equal(
+        l_usa.ndesc, np.asarray([3, 2, 1, 1, 1, 1, 1, 1, 1])
+    )
+    l_eng = base.idlist(tree.vocab.get("English"))
+    np.testing.assert_array_equal(l_eng.ids, P(1, 2, 4, 5, 8, 10, 11, 12, 15))
+    np.testing.assert_array_equal(
+        l_eng.pidpos, np.asarray([-1, 0, 1, 2, 3, 1, 0, 6, 7])
+    )
+    l_usa.validate()
+    l_eng.validate()
+
+
+def test_brute_semantics(tree):
+    q = kw(tree, "USA", "English")
+    np.testing.assert_array_equal(brute.ca_nodes(tree, q), P(1, 2, 4, 5, 11, 12))
+    np.testing.assert_array_equal(brute.slca_nodes(tree, q), P(5, 12))
+    np.testing.assert_array_equal(brute.elca_nodes(tree, q), P(2, 5, 12))
+
+
+def test_dag_compression_fig3(tree):
+    dag = compress(tree)
+    # node 12 (0-based 11) deduped onto node 5 (0-based 4), offset +7
+    assert dag.canon[11] == 4
+    assert dag.occ[4] == 2
+    # subtree nodes dedupe too
+    for orig, canon in [(12, 5), (13, 6), (14, 7), (15, 8)]:
+        assert dag.canon[orig - 1] == canon - 1
+    # all other nodes unique
+    assert dag.num_canonical == 11
+
+
+def test_redundancy_components(tree):
+    _, cluster = build_indices(tree)
+    rcs = cluster.rcs
+    assert rcs.num_rcs == 2
+    assert cluster.rc_root_id(0) == 0  # document root in RC0 (paper: rc_0)
+    assert cluster.rc_root_id(1) == 4  # paper node 5 roots rc_1
+    # rc1 = paper nodes {5,6,7,8}
+    np.testing.assert_array_equal(np.nonzero(rcs.rc_of_node == 1)[0], P(5, 6, 7, 8))
+    # two dummies: instance ids 5 and 12 (paper prose variant), offsets 0 / +7
+    np.testing.assert_array_equal(rcs.dummy_ids, P(5, 12))
+    np.testing.assert_array_equal(rcs.dummy_offset, np.asarray([0, 7]))
+    np.testing.assert_array_equal(rcs.dummy_nested_rc, np.asarray([1, 1]))
+
+
+def test_rc_idlists(tree):
+    _, cluster = build_indices(tree)
+    usa = tree.vocab.get("USA")
+    l0 = cluster.idlist(0, usa)
+    # members {1,2,4,9,11} + dummies {5,12}  (0-based: 0,1,3,4,8,10,11)
+    np.testing.assert_array_equal(l0.ids, P(1, 2, 4, 5, 9, 11, 12))
+    np.testing.assert_array_equal(l0.ndesc, np.asarray([3, 2, 1, 1, 1, 1, 1]))
+    l1 = cluster.idlist(1, usa)
+    np.testing.assert_array_equal(l1.ids, P(5, 7))
+    l0.validate()
+    l1.validate()
+
+
+@pytest.mark.parametrize("algorithm", ["fwd_slca", "bwd_slca", "bwd_slca_plus"])
+@pytest.mark.parametrize("index", ["tree", "dag"])
+def test_slca_scalar(engine, algorithm, index):
+    got = engine.query(
+        ["USA", "English"], semantics="slca", index=index,
+        backend="scalar", algorithm=algorithm,
+    )
+    np.testing.assert_array_equal(got, P(5, 12))
+
+
+@pytest.mark.parametrize("algorithm", ["fwd_elca", "bwd_elca"])
+@pytest.mark.parametrize("index", ["tree", "dag"])
+def test_elca_scalar(engine, algorithm, index):
+    got = engine.query(
+        ["USA", "English"], semantics="elca", index=index,
+        backend="scalar", algorithm=algorithm,
+    )
+    np.testing.assert_array_equal(got, P(2, 5, 12))
+
+
+@pytest.mark.parametrize("semantics,expect", [("slca", (5, 12)), ("elca", (2, 5, 12))])
+@pytest.mark.parametrize("index", ["tree", "dag"])
+def test_vectorized(engine, semantics, expect, index):
+    got = engine.query(
+        ["USA", "English"], semantics=semantics, index=index, backend="jax"
+    )
+    np.testing.assert_array_equal(got, P(*expect))
+
+
+def test_unknown_keyword(engine):
+    assert engine.query(["USA", "nonexistent"]).size == 0
+
+
+def test_single_keyword(engine):
+    # single keyword: SLCA = deepest containers = direct containers here
+    got = engine.query(["Vinyl"], semantics="slca", index="dag", backend="jax")
+    np.testing.assert_array_equal(got, brute.slca_nodes(engine.tree, kw(engine.tree, "Vinyl")))
+
+
+def test_index_sizes(engine):
+    sizes = engine.index_sizes()
+    assert sizes["dag_nodes"] == 11 and sizes["tree_nodes"] == 15
+    assert sizes["rcpm_entries"] == 2
+    # on this tiny example dummies can outweigh dedup (paper §IV-F: the two
+    # effects are data-dependent); shrinkage is asserted on a redundant corpus
+    assert sizes["dag_entries"] <= sizes["tree_entries"] + sizes["rcpm_entries"]
+
+
+def test_index_shrinks_with_redundancy():
+    rd = lambda: NodeSpec(
+        "details",
+        children=[
+            NodeSpec("format", "Vinyl 12in 33rpm stereo remastered"),
+            NodeSpec("country", "USA west-coast"),
+            NodeSpec("language", "English subtitled"),
+        ],
+    )
+    root = NodeSpec(
+        "bib",
+        children=[NodeSpec(f"rel{i}", children=[rd()]) for i in range(8)],
+    )
+    eng = KeywordSearchEngine(build_tree(root))
+    sizes = eng.index_sizes()
+    assert sizes["dag_entries"] < sizes["tree_entries"]
+    # results still identical across indices
+    for sem in ("slca", "elca"):
+        a = eng.query(["Vinyl", "English"], semantics=sem, index="tree")
+        b = eng.query(["Vinyl", "English"], semantics=sem, index="dag")
+        c = eng.query(["Vinyl", "English"], semantics=sem, index="dag", backend="jax")
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)

@@ -1,0 +1,52 @@
+"""XML ingestion: parser semantics per the paper's data model (§II-A)."""
+import numpy as np
+
+from repro.core import KeywordSearchEngine, parse
+from repro.core.xml_tree import NodeSpec, build_tree, tokenize
+
+
+def test_tokenize_whitespace():
+    assert tokenize("Tom Hanks") == ["Tom", "Hanks"]
+    assert tokenize("  a\tb\nc ") == ["a", "b", "c"]
+    assert tokenize("") == []
+
+
+def test_attributes_become_nodes():
+    xml = '<r><movie year="1994 classic"><title>Forrest Gump</title></movie></r>'
+    tree = parse(xml)
+    # paper: attributes are nodes; their name and value tokens are keywords
+    for word in ("year", "1994", "classic", "title", "Forrest", "Gump", "movie"):
+        assert tree.vocab.get(word) >= 0, word
+    eng = KeywordSearchEngine(tree)
+    got = eng.query(["1994", "Gump"], semantics="slca")
+    # the movie element is the smallest node containing both
+    assert got.size == 1
+
+
+def test_direct_vs_indirect_containment():
+    xml = "<a><b>x</b><c><d>x</d></c></a>"
+    tree = parse(xml)
+    eng = KeywordSearchEngine(tree)
+    x = tree.vocab.get("x")
+    lst = eng.base.idlist(x)
+    # a, b, c, d all contain "x"; only b and d directly
+    assert len(lst) == 4
+    assert int(lst.ndesc[0]) == 2  # root sees two direct containers
+
+
+def test_duplicate_keywords_one_node():
+    tree = parse("<a><b>dup dup dup</b></a>")
+    eng = KeywordSearchEngine(tree)
+    got = eng.query(["dup"], semantics="slca")
+    np.testing.assert_array_equal(got, [1])
+
+
+def test_deep_nesting_no_recursion_limit():
+    spec = NodeSpec("leaf", "needle")
+    for i in range(5000):
+        spec = NodeSpec(f"n{i % 7}", children=[spec])
+    tree = build_tree(spec)
+    assert tree.num_nodes == 5001
+    eng = KeywordSearchEngine(tree)
+    got = eng.query(["needle"], semantics="slca")
+    assert got.size == 1 and int(got[0]) == 5000
