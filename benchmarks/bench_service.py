@@ -1,0 +1,65 @@
+"""Beyond-paper: QueryService throughput under offered load × batch window.
+
+For each (offered load, batch window) cell the caller injects the paper's
+9 queries round-robin at the target rate for a fixed duration; the service's
+drain thread microbatches them through the engine's PlanCache.  Reported per
+cell: achieved qps, p50/p99 latency (ms), device launches per query, and the
+plan-cache hit rate — the executable-reuse story in one table.
+
+Env knobs: BENCH_RELEASES, BENCH_SERVICE_SECONDS (default 2.0 per cell),
+BENCH_SERVICE_SMOKE=1 (tiny corpus, one cell, sub-second).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import engine_for
+from repro.data import QUERIES
+from repro.serve import QueryService
+
+SECONDS = float(os.environ.get("BENCH_SERVICE_SECONDS", "2.0"))
+SMOKE = os.environ.get("BENCH_SERVICE_SMOKE", "") == "1"
+
+
+def _drive(svc: QueryService, qps: float, seconds: float) -> tuple[int, float]:
+    """Submit round-robin paper queries at ``qps`` for ``seconds``."""
+    queries = [kws for _, kws in QUERIES.values()]
+    period = 1.0 / qps
+    futs = []
+    t0 = time.perf_counter()
+    i = 0
+    while (now := time.perf_counter()) - t0 < seconds:
+        futs.append(svc.submit(queries[i % len(queries)], "slca"))
+        i += 1
+        sleep = t0 + i * period - now
+        if sleep > 0:
+            time.sleep(sleep)
+    for f in futs:
+        f.result(timeout=600)
+    return len(futs), time.perf_counter() - t0
+
+
+def run() -> None:
+    n_releases = 60 if SMOKE else 0
+    loads = [50] if SMOKE else [50, 200, 1000]
+    windows_ms = [2.0] if SMOKE else [0.5, 2.0, 8.0]
+    seconds = 0.3 if SMOKE else SECONDS
+    print("cell,qps_achieved,p50_ms,p99_ms,launches_per_query,plan_hit_rate")
+    eng = engine_for(n_releases)  # one corpus + index build for all cells
+    for qps in loads:
+        for window in windows_ms:
+            with QueryService(eng, max_batch=64, batch_window_ms=window) as warm:
+                warm.map([kws for _, kws in QUERIES.values()])  # warm compiles
+            eng.plan_cache.reset_counters()  # measure the steady state only
+            with QueryService(eng, max_batch=64, batch_window_ms=window) as svc:
+                n, took = _drive(svc, qps, seconds)
+                s = svc.stats().summary()
+            print(
+                f"load{qps}_win{window},{n / took:.0f},{s['p50_ms']},{s['p99_ms']},"
+                f"{s['launches'] / max(n, 1):.2f},{s['plan_hit_rate']}"
+            )
+
+
+if __name__ == "__main__":
+    run()

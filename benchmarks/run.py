@@ -2,12 +2,35 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Scale knobs:
 BENCH_RELEASES (default 2000 releases ~ 100k nodes), BENCH_REPEATS.
+
+``--smoke`` shrinks every knob (tiny corpus, one repeat, sub-second service
+sweep) so CI and local sanity checks share this entry point and finish in
+seconds; it must stay fast enough to run on every push.
 """
+import argparse
+import os
 import sys
 import time
 
 
-def main() -> None:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny sizes: seconds, not minutes (CI and sanity checks)",
+    )
+    ap.add_argument(
+        "--section", default=None,
+        help="run only sections whose title contains this substring",
+    )
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        # must happen before the sections (and benchmarks.common) import
+        os.environ.setdefault("BENCH_RELEASES", "60")
+        os.environ.setdefault("BENCH_REPEATS", "1")
+        os.environ.setdefault("BENCH_SERVICE_SMOKE", "1")
+
     from . import (
         bench_algorithms,
         bench_category,
@@ -16,6 +39,7 @@ def main() -> None:
         bench_prefix_dag,
         bench_query_length,
         bench_search_hillclimb,
+        bench_service,
         bench_table_properties,
         bench_vectorized,
     )
@@ -30,13 +54,17 @@ def main() -> None:
         ("beyond-paper: vectorized backends", bench_vectorized),
         ("beyond-paper: search perf hillclimb", bench_search_hillclimb),
         ("beyond-paper: prefix-DAG serving dedup", bench_prefix_dag),
+        ("beyond-paper: query service throughput", bench_service),
     ]
+    if args.section:
+        sections = [(t, m) for t, m in sections if args.section in t]
     t0 = time.time()
     for title, mod in sections:
         print(f"# --- {title} ---", flush=True)
         mod.run()
     print(f"# done in {time.time() - t0:.1f}s", flush=True)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -3,15 +3,19 @@
 Public API: :class:`KeywordSearchEngine`, plus the index/search building
 blocks for power users (BaseIndex, IDClusterIndex, search algorithms).
 """
-from .engine import KeywordSearchEngine
+from .engine import KeywordSearchEngine, QueryStats
 from .xml_tree import XMLTree, NodeSpec, Vocab, build_tree, parse
 from .idlist import BaseIndex, IDList, build_containment
 from .components import IDClusterIndex, build_indices
 from .dag import compress
-from . import brute, search_base, search_vec
+from .plan_cache import PlanCache
+from . import brute, io, search_base, search_vec
 
 __all__ = [
     "KeywordSearchEngine",
+    "QueryStats",
+    "PlanCache",
+    "io",
     "XMLTree",
     "NodeSpec",
     "Vocab",

@@ -145,11 +145,18 @@ class IDClusterIndex:
     count of the instance subtree — so no new values need computing.)
     """
 
-    def __init__(self, tree: XMLTree, containment: ContainmentTable | None = None):
+    def __init__(
+        self,
+        tree: XMLTree,
+        containment: ContainmentTable | None = None,
+        dag: DagInfo | None = None,
+        rcs: RedundancyComponents | None = None,
+    ):
+        """``dag``/``rcs`` accept precomputed passes (artifact reload path)."""
         self.tree = tree
         self.containment = containment or build_containment(tree)
-        self.dag = compress(tree)
-        self.rcs = split_components(tree, self.dag)
+        self.dag = dag or compress(tree)
+        self.rcs = rcs or split_components(tree, self.dag)
         # node id -> owning RC for *list membership*:
         #   members: rc_of_node; dummies: dummy_parent_rc (a node can be both
         #   a member of its own RC and a dummy inside a parent RC).

@@ -7,6 +7,12 @@
 ``backend``  "scalar" (paper-faithful host algorithms), "jax" (vectorized),
              or "pallas" (vectorized with the Pallas intersection kernel)
 ``algorithm`` scalar backend only: fwd/bwd × slca/elca variant selection.
+
+An engine owns one :class:`~repro.core.plan_cache.PlanCache`: every
+vectorized DAG launch goes through it, so executables are shared across
+queries, batches, and service calls.  ``save``/``load`` round-trip the full
+index state through the artifact format in :mod:`repro.core.io` (build once,
+memory-map from N serving processes).
 """
 from __future__ import annotations
 
@@ -14,27 +20,69 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from . import io as index_io
 from . import search_base, search_vec
 from .components import IDClusterIndex, build_indices
 from .idlist import BaseIndex
+from .plan_cache import PlanCache
 from .search_dag import dag_search_vec
 from .xml_tree import XMLTree, parse
 
 
 @dataclass
 class QueryStats:
-    """Diagnostics attached to the last query (benchmark plumbing)."""
+    """Diagnostics for the last query / batch / service window.
+
+    ``data`` carries per-call counters (rounds, launches, plan-cache hits);
+    ``latencies_ms`` accumulates per-query wall times when a caller (the
+    QueryService) records them — bounded to the most recent
+    ``MAX_LATENCIES`` so a long-lived service cannot grow without limit —
+    and ``summary()`` folds both into one dict with p50/p99.
+    """
+
+    MAX_LATENCIES = 10_000
 
     data: dict = field(default_factory=dict)
+    latencies_ms: list = field(default_factory=list)
+
+    def record_latency(self, ms: float) -> None:
+        if len(self.latencies_ms) >= self.MAX_LATENCIES:
+            # amortized trim: drop the older half in one slice
+            del self.latencies_ms[: self.MAX_LATENCIES // 2]
+        self.latencies_ms.append(float(ms))
+
+    def percentile(self, p: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_ms), p))
+
+    def summary(self) -> dict:
+        out = dict(self.data)
+        if self.latencies_ms:
+            out["queries_timed"] = len(self.latencies_ms)
+            out["p50_ms"] = round(self.percentile(50), 3)
+            out["p99_ms"] = round(self.percentile(99), 3)
+        return out
 
 
 class KeywordSearchEngine:
-    def __init__(self, tree: XMLTree, build_dag: bool = True):
+    def __init__(
+        self,
+        tree: XMLTree,
+        build_dag: bool = True,
+        plan_cache: PlanCache | None = None,
+        *,
+        base: BaseIndex | None = None,
+        cluster: IDClusterIndex | None = None,
+    ):
         self.tree = tree
-        if build_dag:
+        if base is not None:  # artifact reload: indices arrive prebuilt
+            self.base, self.cluster = base, cluster
+        elif build_dag:
             self.base, self.cluster = build_indices(tree)
         else:
             self.base, self.cluster = BaseIndex(tree), None
+        self.plan_cache = plan_cache or PlanCache()
         self.last_stats = QueryStats()
 
     # ------------------------------------------------------------------ #
@@ -45,6 +93,32 @@ class KeywordSearchEngine:
     @classmethod
     def from_tree(cls, tree: XMLTree, **kw) -> "KeywordSearchEngine":
         return cls(tree, **kw)
+
+    # ------------------------------------------------------------------ #
+    # Index artifacts (see core/io.py for the format)
+    # ------------------------------------------------------------------ #
+    def save(self, path: str) -> None:
+        """Write the full index state to an artifact directory."""
+        dag = self.cluster.dag if self.cluster is not None else None
+        rcs = self.cluster.rcs if self.cluster is not None else None
+        index_io.save_parts(path, self.tree, self.base.containment, dag, rcs)
+
+    @classmethod
+    def load(
+        cls,
+        path: str,
+        mmap: bool = True,
+        plan_cache: PlanCache | None = None,
+    ) -> "KeywordSearchEngine":
+        """Reload a saved artifact without re-running any index build."""
+        tree, containment, dag, rcs, _ = index_io.load_parts(path, mmap=mmap)
+        base = BaseIndex(tree, containment)
+        cluster = (
+            IDClusterIndex(tree, containment, dag=dag, rcs=rcs)
+            if dag is not None
+            else None
+        )
+        return cls(tree, plan_cache=plan_cache, base=base, cluster=cluster)
 
     # ------------------------------------------------------------------ #
     def keyword_ids(self, keywords: list[str] | str) -> list[int]:
@@ -98,6 +172,7 @@ class KeywordSearchEngine:
                 semantics=semantics,
                 backend="pallas" if backend == "pallas" else "xla",
                 stats=self.last_stats.data,
+                plan=self.plan_cache,
             )
         raise ValueError(f"index must be tree|dag, got {index!r}")
 
@@ -115,7 +190,11 @@ class KeywordSearchEngine:
         kws = [self.keyword_ids(q) for q in queries]
         self.last_stats = QueryStats()
         return dag_search_vec_multi(
-            self.cluster, kws, semantics=semantics, stats=self.last_stats.data
+            self.cluster,
+            kws,
+            semantics=semantics,
+            stats=self.last_stats.data,
+            plan=self.plan_cache,
         )
 
     # ------------------------------------------------------------------ #

@@ -1,0 +1,178 @@
+"""PlanCache — shared shape-bucket registry for batched device searches.
+
+Every vectorized DAG search round packs a set of work items (one list-of-
+IDLists each) into padded device arrays and calls the jitted
+``ca_search_batch``.  jit caches executables by *shape*, so the number of
+distinct packed shapes is the number of compiles the process ever pays.
+This module owns that shape policy in one place:
+
+  * list lengths pad to power-of-two buckets (as before), and
+  * the leading work-item axis R now *also* pads to a power-of-two bucket —
+    previously every distinct frontier size compiled a fresh executable;
+    a serving process saw a new R almost every batch.
+
+Padded rows carry ``n0 = 0`` (no valid entries), which the kernel already
+maps to an empty result, so R-padding is free of special cases.
+
+The cache is engine-owned (each :class:`KeywordSearchEngine` carries one) but
+can be shared across engines serving the same process; hit/miss/launch
+counters feed ``QueryStats`` and the service benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .idlist import IDList
+from .search_vec import INT_PAD, bucket, ca_search_batch
+
+_EMPTY = np.zeros(0, dtype=np.int64)
+
+
+@dataclass(frozen=True)
+class PlanKey:
+    """Static shape signature of one packed launch (one jit executable)."""
+
+    rows: int  # R bucket (work items)
+    k: int  # keywords per item
+    m0: int  # shortest-list bucket
+    mo: int  # other-list bucket
+    semantics: str
+    backend: str
+
+
+class PlanCache:
+    """Packs work items to bucketed shapes and tracks executable reuse."""
+
+    def __init__(self, backend: str = "xla", min_rows: int = 1):
+        self.backend = backend
+        self.min_rows = min_rows
+        self.launches = 0  # device calls issued
+        self.hits = 0  # launches whose shape signature was seen before
+        self.misses = 0  # launches that compiled a new executable
+        self.rows_padded = 0  # wasted rows across all launches (R padding)
+        self._seen: set[tuple] = set()
+
+    # ------------------------------------------------------------------ #
+    @property
+    def plans(self) -> int:
+        """Distinct shape signatures this cache has launched."""
+        return len(self._seen)
+
+    def hit_rate(self) -> float:
+        return self.hits / self.launches if self.launches else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "plan_launches_total": self.launches,
+            "plan_hits": self.hits,
+            "plan_misses": self.misses,
+            "plans": self.plans,
+            "plan_hit_rate": round(self.hit_rate(), 4),
+            "rows_padded": self.rows_padded,
+        }
+
+    def reset_counters(self) -> None:
+        """Zero the counters but keep the seen-shape set (plans stay warm)."""
+        self.launches = self.hits = self.misses = self.rows_padded = 0
+
+    @staticmethod
+    def executable_count() -> int:
+        """Entries in the underlying jit cache (compile-count ground truth).
+
+        Returns -1 if the private jax introspection hook is unavailable —
+        callers must treat that as "unknown", not "zero"."""
+        cache_size = getattr(ca_search_batch, "_cache_size", None)
+        return int(cache_size()) if cache_size is not None else -1
+
+    # ------------------------------------------------------------------ #
+    def pack(
+        self,
+        per_item: list[list[IDList]],
+        keys: list,
+        semantics: str = "slca",
+        backend: str = "xla",
+    ):
+        """Pad items' lists to shared buckets; stack along a bucketed R axis.
+
+        Items with any empty list are dropped (their intersection is empty).
+        Returns (batch dict | None, kept_keys, plan_key | None).
+        """
+        keep = [i for i, ls in enumerate(per_item) if ls and all(len(l) for l in ls)]
+        if not keep:
+            return None, [], None
+        keys = [keys[i] for i in keep]
+        per_item = [per_item[i] for i in keep]
+        k = len(per_item[0])
+        m0 = bucket(max(min(len(l) for l in ls) for ls in per_item))
+        mo = bucket(max(max(len(l) for l in ls) for ls in per_item))
+        rows = bucket(len(keys), minimum=self.min_rows)
+        self.rows_padded += rows - len(keys)
+
+        ids0 = np.full((rows, m0), INT_PAD, np.int32)
+        pid0 = np.full((rows, m0), -1, np.int32)
+        nd0 = np.zeros((rows, m0), np.int32)
+        oids = np.full((rows, k - 1, mo), INT_PAD, np.int32)
+        ond = np.zeros((rows, k - 1, mo), np.int32)
+        n0 = np.zeros((rows,), np.int32)
+        on = np.zeros((rows, k - 1), np.int32)
+        for r, ls in enumerate(per_item):
+            order = np.argsort([len(l) for l in ls], kind="stable")
+            ls = [ls[i] for i in order]
+            l0 = ls[0]
+            n = len(l0)
+            ids0[r, :n] = l0.ids
+            nd0[r, :n] = l0.ndesc
+            pid0[r, :n] = np.where(
+                l0.pidpos >= 0, l0.ids[np.clip(l0.pidpos, 0, n - 1)], -1
+            )
+            n0[r] = n
+            for j, l in enumerate(ls[1:]):
+                oids[r, j, : len(l)] = l.ids
+                ond[r, j, : len(l)] = l.ndesc
+                on[r, j] = len(l)
+        batch = dict(
+            ids0=jnp.asarray(ids0),
+            pid0=jnp.asarray(pid0),
+            ndesc0=jnp.asarray(nd0),
+            other_ids=jnp.asarray(oids),
+            other_ndesc=jnp.asarray(ond),
+            n0=jnp.asarray(n0),
+            other_n=jnp.asarray(on),
+        )
+        return batch, keys, PlanKey(rows, k, m0, mo, semantics, backend)
+
+    # ------------------------------------------------------------------ #
+    def run(
+        self,
+        per_item: list[list[IDList]],
+        keys: list,
+        semantics: str = "slca",
+        backend: str | None = None,
+    ) -> dict:
+        """Search every work item in one (bucketed) launch.
+
+        Returns {key: sorted int64 result ids} for *every* input key; items
+        dropped at packing (an empty list => empty intersection) map to the
+        empty result.
+        """
+        backend = backend or self.backend
+        out = {key: _EMPTY for key in keys}
+        batch, kept, sig = self.pack(per_item, keys, semantics, backend)
+        if batch is None:
+            return out
+        if sig in self._seen:
+            self.hits += 1
+        else:
+            self._seen.add(sig)
+            self.misses += 1
+        self.launches += 1
+        ids, mask = ca_search_batch(**batch, semantics=semantics, backend=backend)
+        ids = np.asarray(ids)
+        mask = np.asarray(mask)
+        for r, key in enumerate(kept):
+            out[key] = ids[r][mask[r]].astype(np.int64)
+        return out

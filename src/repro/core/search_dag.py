@@ -12,64 +12,19 @@ from __future__ import annotations
 import numpy as np
 
 from .components import IDClusterIndex
-from .search_vec import bucket, ca_search, ca_search_batch, pack_query, run_query
-import jax.numpy as jnp
+from .plan_cache import PlanCache
 
-from .idlist import IDList
-from .search_vec import INT_PAD
+_FALLBACK_PLAN: PlanCache | None = None
 
 
-def _pack_lists_batch(per_rc: list, keys: list):
-    """Pad each entry's lists to shared buckets and stack along a leading axis.
-
-    ``per_rc``: one list-of-IDLists per work item (same k across items);
-    ``keys``: caller-side identifiers (RC ids, or (query, rc) pairs)."""
-    keep = [i for i, ls in enumerate(per_rc) if all(len(l) for l in ls)]
-    if not keep:
-        return None, []
-    keys = [keys[i] for i in keep]
-    per_rc = [per_rc[i] for i in keep]
-    k = len(per_rc[0])
-    m0 = bucket(max(min(len(l) for l in ls) for ls in per_rc))
-    mo = bucket(max(max(len(l) for l in ls) for ls in per_rc))
-    R = len(keys)
-    ids0 = np.full((R, m0), INT_PAD, np.int32)
-    pid0 = np.full((R, m0), -1, np.int32)
-    nd0 = np.zeros((R, m0), np.int32)
-    oids = np.full((R, k - 1, mo), INT_PAD, np.int32)
-    ond = np.zeros((R, k - 1, mo), np.int32)
-    n0 = np.zeros((R,), np.int32)
-    on = np.zeros((R, k - 1), np.int32)
-    for r, ls in enumerate(per_rc):
-        order = np.argsort([len(l) for l in ls], kind="stable")
-        ls = [ls[i] for i in order]
-        l0 = ls[0]
-        n = len(l0)
-        ids0[r, :n] = l0.ids
-        nd0[r, :n] = l0.ndesc
-        pid0[r, :n] = np.where(
-            l0.pidpos >= 0, l0.ids[np.clip(l0.pidpos, 0, n - 1)], -1
-        )
-        n0[r] = n
-        for j, l in enumerate(ls[1:]):
-            oids[r, j, : len(l)] = l.ids
-            ond[r, j, : len(l)] = l.ndesc
-            on[r, j] = len(l)
-    batch = dict(
-        ids0=jnp.asarray(ids0),
-        pid0=jnp.asarray(pid0),
-        ndesc0=jnp.asarray(nd0),
-        other_ids=jnp.asarray(oids),
-        other_ndesc=jnp.asarray(ond),
-        n0=jnp.asarray(n0),
-        other_n=jnp.asarray(on),
-    )
-    return batch, keys
-
-
-def _pack_rc_batch(index: IDClusterIndex, rcs: list[int], kws: list[int]):
-    per_rc = [index.idlists(rc, kws) for rc in rcs]
-    return _pack_lists_batch(per_rc, rcs)
+def _plan_or_default(plan: PlanCache | None) -> PlanCache:
+    """Callers without an engine share one module-level PlanCache."""
+    global _FALLBACK_PLAN
+    if plan is not None:
+        return plan
+    if _FALLBACK_PLAN is None:
+        _FALLBACK_PLAN = PlanCache()
+    return _FALLBACK_PLAN
 
 
 def dag_search_vec(
@@ -78,8 +33,12 @@ def dag_search_vec(
     semantics: str = "slca",
     backend: str = "xla",
     stats: dict | None = None,
+    plan: PlanCache | None = None,
 ) -> np.ndarray:
     """Frontier-batched DAG search; returns sorted original node ids."""
+    plan = _plan_or_default(plan)
+    launches0 = plan.launches
+    pallas_launches = 0
     memo: dict[int, np.ndarray] = {}
     frontier = [0]
     rounds = 0
@@ -94,28 +53,16 @@ def dag_search_vec(
                 )
                 for rc in frontier
             }
-            rcs = list(frontier)
+            pallas_launches += len(frontier)
         else:
-            batch, rcs = _pack_rc_batch(index, frontier, kws)
-            if batch is None:
-                for rc in frontier:
-                    memo[rc] = np.zeros(0, dtype=np.int64)
-                break
-            for rc in frontier:
-                if rc not in rcs:
-                    memo[rc] = np.zeros(0, dtype=np.int64)
-            ids, mask = ca_search_batch(
-                **{k: v for k, v in batch.items()},
+            results = plan.run(
+                [index.idlists(rc, kws) for rc in frontier],
+                frontier,
                 semantics=semantics,
                 backend=backend,
             )
-            ids = np.asarray(ids)
-            mask = np.asarray(mask)
-            results = {
-                rc: ids[r][mask[r]].astype(np.int64) for r, rc in enumerate(rcs)
-            }
         nxt: list[int] = []
-        for rc in rcs:
+        for rc in frontier:
             res = results[rc]
             memo[rc] = res
             root = index.rc_root_id(rc)
@@ -129,6 +76,11 @@ def dag_search_vec(
     if stats is not None:
         stats["rounds"] = rounds
         stats["rcs_searched"] = len(memo)
+        if backend == "pallas":  # pallas dispatches per RC, outside the cache
+            stats["launches"] = pallas_launches
+        else:
+            stats.update(plan.snapshot())  # lifetime counters (plan_* keys)
+            stats["launches"] = plan.launches - launches0  # this call only
     return _splice(index, memo, semantics)
 
 
@@ -137,42 +89,35 @@ def dag_search_vec_multi(
     queries: list[list[int]],
     semantics: str = "slca",
     stats: dict | None = None,
+    plan: PlanCache | None = None,
 ) -> list[np.ndarray]:
     """Serve a *batch* of queries: one device launch per frontier round.
 
     All (query, rc) work items of a round that share a keyword count are
-    packed into one ca_search_batch call — the cross-query batching that
-    amortizes dispatch overhead (EXPERIMENTS.md §Perf, search iteration 3).
-    Memoisation is per query (different keyword sets ⇒ different RC results).
+    packed into one launch through the PlanCache — the cross-query batching
+    that amortizes dispatch overhead (EXPERIMENTS.md §Perf, search iteration
+    3) — and the cache's R-bucketing keeps the jit executable set shared
+    across *calls*, not just rounds.  Memoisation is per query (different
+    keyword sets ⇒ different RC results).
     """
+    plan = _plan_or_default(plan)
+    launches0 = plan.launches
     memos: list[dict[int, np.ndarray]] = [{} for _ in queries]
     frontier: list[tuple[int, int]] = [
         (qi, 0) for qi, kws in enumerate(queries) if all(k >= 0 for k in kws)
     ]
     rounds = 0
-    launches = 0
     while frontier:
         rounds += 1
         by_k: dict[int, list[tuple[int, int]]] = {}
         for qi, rc in frontier:
             by_k.setdefault(len(queries[qi]), []).append((qi, rc))
         nxt: list[tuple[int, int]] = []
-        for k, items in by_k.items():
+        for _, items in by_k.items():
             per_item = [index.idlists(rc, queries[qi]) for qi, rc in items]
-            batch, keys = _pack_lists_batch(per_item, items)
-            for it in items:
-                if it not in (keys or []):
-                    memos[it[0]][it[1]] = np.zeros(0, dtype=np.int64)
-            if batch is None:
-                continue
-            launches += 1
-            ids, mask = ca_search_batch(
-                **batch, semantics=semantics, backend="xla"
-            )
-            ids = np.asarray(ids)
-            mask = np.asarray(mask)
-            for r, (qi, rc) in enumerate(keys):
-                res = ids[r][mask[r]].astype(np.int64)
+            results = plan.run(per_item, items, semantics=semantics)
+            for qi, rc in items:
+                res = results[(qi, rc)]
                 memos[qi][rc] = res
                 root = index.rc_root_id(rc)
                 for x in res:
@@ -180,16 +125,17 @@ def dag_search_vec_multi(
                         continue
                     e = index.rcpm_lookup(int(x))
                     if e is not None and e.rc not in memos[qi]:
-                        memos[qi][e.rc] = None  # claimed
+                        # claim with a placeholder so later items of this (and
+                        # the next) round cannot re-enqueue the same RC; the
+                        # claim is overwritten with the real result when its
+                        # frontier round executes
+                        memos[qi][e.rc] = None
                         nxt.append((qi, e.rc))
-        # drop claims (placeholder None) so packing sees real work only
-        for qi, rc in nxt:
-            if memos[qi].get(rc, 0) is None:
-                del memos[qi][rc]
         frontier = nxt
     if stats is not None:
         stats["rounds"] = rounds
-        stats["launches"] = launches
+        stats.update(plan.snapshot())  # lifetime counters (plan_* keys)
+        stats["launches"] = plan.launches - launches0  # this call only
     return [
         _splice(index, memos[qi], semantics)
         if all(k >= 0 for k in queries[qi])

@@ -1,0 +1,9 @@
+"""Distribution layer: mesh context, sharding rules, collectives, search.
+
+Submodules (imported explicitly — keep this package root import-light):
+
+  ctx          ambient mesh context + activation sharding constraints
+  sharding     PartitionSpec rules for param/data/cache trees
+  search_shard distributed IDList keyword search (model-axis sharded lists)
+  collectives  gradient compression for cross-host reduction
+"""

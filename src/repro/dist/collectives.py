@@ -1,0 +1,34 @@
+"""Gradient compression for cross-host reduction (int8 + error feedback).
+
+``compress_grads_with_feedback`` quantizes each gradient leaf to int8 with a
+per-leaf max-abs scale and returns (dequantized, residual).  The residual is
+the exact quantization error and is added back into the *next* step's
+gradient before quantizing (error feedback), so the transmitted signal
+converges to the true gradient sum instead of accumulating bias.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _compress_leaf(g: jax.Array, r: jax.Array) -> tuple[jax.Array, jax.Array]:
+    acc = g.astype(jnp.float32) + r.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(acc)) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(acc / safe), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * safe
+    return deq, acc - deq
+
+
+def compress_grads_with_feedback(grads, residual=None):
+    """Returns (dequantized_grads, new_residual); both trees match ``grads``."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    if residual is None:
+        r_leaves = [jnp.zeros_like(g, jnp.float32) for g in g_leaves]
+    else:
+        r_leaves = jax.tree.leaves(residual)
+    pairs = [_compress_leaf(g, r) for g, r in zip(g_leaves, r_leaves)]
+    deq = jax.tree.unflatten(treedef, [d for d, _ in pairs])
+    new_residual = jax.tree.unflatten(treedef, [r for _, r in pairs])
+    return deq, new_residual

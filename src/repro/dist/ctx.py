@@ -1,0 +1,106 @@
+"""Ambient sharding context: a mesh that model code can consult.
+
+Model forward passes call :func:`constrain_batch` / :func:`constrain_vocab`
+unconditionally; with no active context they are identity, so single-device
+paths pay nothing and stay mesh-free.  Inside ``with ctx.use(mesh):`` the
+same calls become GSPMD sharding constraints that pin activations to the
+(data, model) layout the launchers expect.
+
+Constraints are *best effort*: an axis that does not divide the mesh axis is
+left unconstrained (GSPMD picks a layout) rather than padded — the launchers
+choose batch sizes that divide, so in practice everything pins.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from contextvars import ContextVar
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import _batch_entry, _data_axes, _dp_size
+
+_ACTIVE: ContextVar["ShardCtx | None"] = ContextVar("repro_shard_ctx", default=None)
+
+
+class ShardCtx:
+    """One active mesh plus the derived axis bookkeeping.
+
+    Axis policy (which mesh axes are data-like, how batch entries are
+    spelled) is owned by :mod:`repro.dist.sharding` so activations and
+    input shardings can never disagree.
+    """
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self.data_axes = _data_axes(mesh)
+        self.model_size = int(mesh.shape.get("model", 1))
+
+    # ------------------------------------------------------------------ #
+    def dp_size(self) -> int:
+        return _dp_size(self.mesh)
+
+    def _constrain(self, x, spec: P):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def constrain_batch(self, x):
+        """Pin axis 0 (batch) over the data axes; rest unconstrained."""
+        if not self.data_axes or x.ndim < 1 or x.shape[0] % self.dp_size():
+            return x
+        return self._constrain(
+            x, P(_batch_entry(self.mesh), *([None] * (x.ndim - 1)))
+        )
+
+    def constrain_vocab(self, x):
+        """Pin the trailing (vocab) axis over "model"; batch over data."""
+        if self.model_size <= 1 or x.ndim < 1 or x.shape[-1] % self.model_size:
+            return self.constrain_batch(x)
+        spec = [None] * x.ndim
+        spec[-1] = "model"
+        if self.data_axes and x.ndim > 1 and x.shape[0] % self.dp_size() == 0:
+            spec[0] = _batch_entry(self.mesh)
+        return self._constrain(x, P(*spec))
+
+    def constrain_heads(self, x):
+        """Pin axis 2 (heads) of [B, S, H, hd] over "model" (head-TP)."""
+        if x.ndim != 4 or self.model_size <= 1 or x.shape[2] % self.model_size:
+            return self.constrain_batch(x)
+        spec = [None, None, "model", None]
+        if self.data_axes and x.shape[0] % self.dp_size() == 0:
+            spec[0] = _batch_entry(self.mesh)
+        return self._constrain(x, P(*spec))
+
+
+# ---------------------------------------------------------------------- #
+# Module-level API (what model code imports)
+# ---------------------------------------------------------------------- #
+
+
+def current() -> ShardCtx | None:
+    """The active ShardCtx, or None outside any ``use`` block."""
+    return _ACTIVE.get()
+
+
+@contextmanager
+def use(mesh: Mesh):
+    """Activate ``mesh`` for the dynamic extent of the block."""
+    token = _ACTIVE.set(ShardCtx(mesh))
+    try:
+        yield _ACTIVE.get()
+    finally:
+        _ACTIVE.reset(token)
+
+
+def constrain_batch(x):
+    sctx = current()
+    return x if sctx is None else sctx.constrain_batch(x)
+
+
+def constrain_vocab(x):
+    sctx = current()
+    return x if sctx is None else sctx.constrain_vocab(x)
+
+
+def constrain_heads(x):
+    sctx = current()
+    return x if sctx is None else sctx.constrain_heads(x)

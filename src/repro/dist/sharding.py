@@ -1,0 +1,102 @@
+"""PartitionSpec rules for parameter / data / cache trees.
+
+One deliberately simple, total rule set (every leaf gets a spec, any tree
+shape works):
+
+  params  shard the largest axis divisible by the "model" axis size; on a
+          tie prefer the *last* such axis (vocab / ffn columns).  Scalars and
+          indivisible leaves replicate.
+  data    shard axis 0 (the global batch) over the data-like axes
+          ("pod", "data") when divisible; everything else replicated.
+  cache   like data, plus rank-4 [B, T, Hk, hd] KV blocks shard their head
+          axis over "model" when divisible.
+
+``to_named`` converts a spec tree into NamedShardings for jit
+in/out_shardings (the launchers and the dry-run both go through it).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _shape_of(leaf) -> tuple[int, ...] | None:
+    shape = getattr(leaf, "shape", None)
+    return tuple(shape) if shape is not None else None
+
+
+def _data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(n for n in ("pod", "data") if n in mesh.shape)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return math.prod(int(mesh.shape[a]) for a in _data_axes(mesh)) or 1
+
+
+def _batch_entry(mesh: Mesh):
+    axes = _data_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def param_specs(tree, mesh: Mesh):
+    """Model-parallel spec per parameter (largest "model"-divisible axis)."""
+    m = int(mesh.shape.get("model", 1))
+
+    def spec(leaf) -> P:
+        shape = _shape_of(leaf)
+        if not shape or m <= 1:
+            return P()
+        best = -1
+        for i, s in enumerate(shape):
+            if s % m == 0 and s >= m and (best < 0 or s >= shape[best]):
+                best = i
+        if best < 0:
+            return P()
+        entries = [None] * len(shape)
+        entries[best] = "model"
+        return P(*entries)
+
+    return jax.tree.map(spec, tree)
+
+
+def data_specs(tree, mesh: Mesh):
+    """Batch-parallel spec per input leaf (axis 0 over the data axes)."""
+    dp = _dp_size(mesh)
+
+    def spec(leaf) -> P:
+        shape = _shape_of(leaf)
+        if not shape or dp <= 1 or shape[0] % dp:
+            return P()
+        return P(_batch_entry(mesh), *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(spec, tree)
+
+
+def cache_specs(tree, mesh: Mesh):
+    """KV/state cache spec: batch over data, KV heads over "model"."""
+    dp = _dp_size(mesh)
+    m = int(mesh.shape.get("model", 1))
+
+    def spec(leaf) -> P:
+        shape = _shape_of(leaf)
+        if not shape:
+            return P()
+        entries = [None] * len(shape)
+        if dp > 1 and shape[0] % dp == 0:
+            entries[0] = _batch_entry(mesh)
+        if len(shape) == 4 and m > 1 and shape[2] % m == 0:
+            entries[2] = "model"
+        return P(*entries)
+
+    return jax.tree.map(spec, tree)
+
+
+def to_named(spec_tree, mesh: Mesh):
+    """PartitionSpec tree -> NamedSharding tree (jit in/out_shardings)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,1 @@
+"""Drivers: training launcher, pod-scale dry-run lowering, serving, tuning."""

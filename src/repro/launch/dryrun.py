@@ -181,6 +181,8 @@ def _lower_step_inner(cfg: ModelConfig, shape: str, mesh, microbatches: int = 1)
 
 def _extract_costs(compiled) -> dict:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jaxlib: one dict per device
+        cost = cost[0] if cost else {}
     coll = collective_bytes_from_hlo(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -1,0 +1,1 @@
+"""Roofline accounting: HLO cost extraction and bottleneck analysis."""

@@ -1,0 +1,192 @@
+"""QueryService — asynchronous admission + microbatched execution.
+
+The paper's batched DAG search (`dag_search_vec_multi`) amortizes device
+dispatch across a batch, but as a one-shot call: every caller must assemble
+its own batch.  This service is the admission path in front of it:
+
+  * ``submit()`` enqueues a query and returns a Future immediately;
+  * a drain thread collects everything that arrives inside one *batch
+    window* (bounded by ``max_batch``), groups it by semantics, and executes
+    each group through the engine's batched search — all queries of a window
+    share frontier-round launches, and the engine-owned PlanCache reuses jit
+    executables across windows (grouping by (k, bucket-shape) happens
+    there);
+  * per-query latency, launch counts, and plan-cache hit rates surface
+    through :class:`repro.core.engine.QueryStats`.
+
+Thread model: one daemon drain thread per service.  The engine itself is
+only touched from the drain thread, so no engine-level locking is needed.
+
+    with QueryService(engine, batch_window_ms=2.0) as svc:
+        futs = [svc.submit(q) for q in queries]
+        results = [f.result() for f in futs]
+        print(svc.stats().summary())
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.engine import KeywordSearchEngine, QueryStats
+from repro.core.search_dag import dag_search_vec_multi
+
+
+@dataclass
+class _Pending:
+    kws: list[int]  # resolved keyword ids
+    semantics: str
+    future: Future
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+class QueryService:
+    """Microbatching front-end over one KeywordSearchEngine."""
+
+    def __init__(
+        self,
+        engine: KeywordSearchEngine,
+        max_batch: int = 64,
+        batch_window_ms: float = 2.0,
+    ):
+        if engine.cluster is None:
+            raise ValueError("QueryService needs an engine with the DAG index")
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.batch_window_s = float(batch_window_ms) / 1e3
+        self._pending: list[_Pending] = []
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._closed = False
+        self._stats = QueryStats(
+            data={"queries": 0, "batches": 0, "launches": 0, "max_batch_seen": 0}
+        )
+        self._thread = threading.Thread(
+            target=self._drain_loop, name="query-service-drain", daemon=True
+        )
+        self._thread.start()
+
+    # ------------------------------------------------------------------ #
+    # Admission
+    # ------------------------------------------------------------------ #
+    def submit(self, keywords: list[str] | str, semantics: str = "slca") -> Future:
+        """Enqueue one query; resolves to sorted original node ids."""
+        if semantics not in ("slca", "elca"):
+            raise ValueError(f"semantics must be slca|elca, got {semantics!r}")
+        fut: Future = Future()
+        item = _Pending(self.engine.keyword_ids(keywords), semantics, fut)
+        with self._wake:
+            if self._closed:
+                raise RuntimeError("QueryService is closed")
+            self._pending.append(item)
+            self._wake.notify()
+        return fut
+
+    def query(self, keywords: list[str] | str, semantics: str = "slca") -> np.ndarray:
+        """Synchronous convenience: submit + wait."""
+        return self.submit(keywords, semantics).result()
+
+    def map(
+        self, queries: list[list[str] | str], semantics: str = "slca"
+    ) -> list[np.ndarray]:
+        """Submit many queries, wait for all (order preserved)."""
+        futs = [self.submit(q, semantics) for q in queries]
+        return [f.result() for f in futs]
+
+    # ------------------------------------------------------------------ #
+    # Stats / lifecycle
+    # ------------------------------------------------------------------ #
+    def stats(self) -> QueryStats:
+        """Snapshot of service counters + the engine plan cache."""
+        with self._lock:
+            snap = QueryStats(
+                data=dict(self._stats.data),
+                latencies_ms=list(self._stats.latencies_ms),
+            )
+        snap.data.update(self.engine.plan_cache.snapshot())
+        return snap
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Drain outstanding queries, then stop the worker thread."""
+        with self._wake:
+            self._closed = True
+            self._wake.notify()
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "QueryService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------ #
+    # Drain loop
+    # ------------------------------------------------------------------ #
+    def _take_window(self) -> list[_Pending] | None:
+        """Block for work; return one admission window (None = shut down)."""
+        with self._wake:
+            while not self._pending and not self._closed:
+                self._wake.wait()
+            if not self._pending:
+                return None  # closed and drained
+            # admission window: let a burst accumulate so batching has
+            # material; submit() notifies, so a filled batch exits early
+            deadline = time.perf_counter() + self.batch_window_s
+            while len(self._pending) < self.max_batch and not self._closed:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                self._wake.wait(timeout=remaining)
+            window, self._pending = (
+                self._pending[: self.max_batch],
+                self._pending[self.max_batch :],
+            )
+        return window
+
+    def _drain_loop(self) -> None:
+        while True:
+            window = self._take_window()
+            if window is None:
+                return
+            by_sem: dict[str, list[_Pending]] = {}
+            for item in window:
+                by_sem.setdefault(item.semantics, []).append(item)
+            launches0 = self.engine.plan_cache.launches
+            for semantics, items in by_sem.items():
+                self._run_group(semantics, items)
+            done = time.perf_counter()
+            with self._lock:
+                d = self._stats.data
+                d["queries"] += len(window)
+                d["batches"] += 1
+                d["launches"] += self.engine.plan_cache.launches - launches0
+                d["max_batch_seen"] = max(d["max_batch_seen"], len(window))
+                for item in window:
+                    self._stats.record_latency((done - item.t_submit) * 1e3)
+
+    @staticmethod
+    def _deliver(fut: Future, result=None, exc: Exception | None = None) -> None:
+        # a caller may cancel concurrently; losing the race must not kill
+        # the drain thread (InvalidStateError on a cancelled future)
+        try:
+            fut.set_exception(exc) if exc is not None else fut.set_result(result)
+        except InvalidStateError:
+            pass
+
+    def _run_group(self, semantics: str, items: list[_Pending]) -> None:
+        try:
+            results = dag_search_vec_multi(
+                self.engine.cluster,
+                [it.kws for it in items],
+                semantics=semantics,
+                plan=self.engine.plan_cache,
+            )
+        except Exception as e:  # surface the failure on every waiter
+            for it in items:
+                self._deliver(it.future, exc=e)
+            return
+        for it, res in zip(items, results):
+            self._deliver(it.future, result=res)

@@ -1,0 +1,1 @@
+"""Training substrate: train step, optimizers, checkpointing, supervision."""

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional test dep (see pyproject [test])
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.decode_attention import decode_attention_pallas_call

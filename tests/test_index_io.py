@@ -1,0 +1,143 @@
+"""Index artifact round-trip: save once, reload (mmap) anywhere, same answers.
+
+Covers: in-process reload equality on all 9 paper queries x both semantics,
+a *fresh-process* reload (the serving-fleet story), mmap member loading,
+tree-only artifacts, and the format-version guard.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import KeywordSearchEngine
+from repro.core.io import FORMAT_VERSION, load_arrays
+from repro.data import QUERIES, generate_discogs_tree
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _engine(n_releases=60, seed=7) -> KeywordSearchEngine:
+    return KeywordSearchEngine(generate_discogs_tree(n_releases=n_releases, seed=seed))
+
+
+def test_roundtrip_identical_results(tmp_path):
+    eng = _engine()
+    eng.save(str(tmp_path / "idx"))
+    eng2 = KeywordSearchEngine.load(str(tmp_path / "idx"))
+    checked = 0
+    for q, (_, kws) in QUERIES.items():
+        for sem in ("slca", "elca"):
+            want = eng.query(kws, semantics=sem, index="dag", backend="scalar")
+            np.testing.assert_array_equal(
+                eng2.query(kws, semantics=sem, index="dag", backend="jax"),
+                want, err_msg=f"{q} {sem} dag/jax",
+            )
+            np.testing.assert_array_equal(
+                eng2.query(kws, semantics=sem, index="tree", backend="scalar"),
+                want, err_msg=f"{q} {sem} tree/scalar",
+            )
+            checked += 1
+    assert checked == 18
+    assert eng2.index_sizes() == eng.index_sizes()
+
+
+def test_fresh_process_reload(tmp_path):
+    """The fleet story: a process that never saw the XML serves the index."""
+    eng = _engine()
+    eng.save(str(tmp_path / "idx"))
+    want = {
+        f"{q}/{sem}": eng.query(kws, semantics=sem, backend="scalar").tolist()
+        for q, (_, kws) in QUERIES.items()
+        for sem in ("slca", "elca")
+    }
+    script = (
+        "import sys, json, numpy as np\n"
+        f"sys.path.insert(0, {SRC!r})\n"
+        "from repro.core import KeywordSearchEngine\n"
+        "from repro.data import QUERIES\n"
+        f"eng = KeywordSearchEngine.load({str(tmp_path / 'idx')!r})\n"
+        "out = {f'{q}/{sem}': eng.query(kws, semantics=sem, backend='jax').tolist()\n"
+        "       for q, (_, kws) in QUERIES.items() for sem in ('slca', 'elca')}\n"
+        "print('RESULT ' + json.dumps(out))\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True, timeout=600
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    assert json.loads(line[len("RESULT "):]) == want
+
+
+def test_resave_of_loaded_index(tmp_path):
+    """load -> save -> load again (exercises the lazy rc_children CSR view)."""
+    eng = _engine(n_releases=20)
+    eng.save(str(tmp_path / "a"))
+    mid = KeywordSearchEngine.load(str(tmp_path / "a"))
+    mid.save(str(tmp_path / "b"))
+    eng3 = KeywordSearchEngine.load(str(tmp_path / "b"))
+    kws = QUERIES["Q7"][1]
+    for sem in ("slca", "elca"):
+        np.testing.assert_array_equal(
+            eng3.query(kws, semantics=sem, backend="jax"),
+            eng.query(kws, semantics=sem, backend="scalar"),
+        )
+    assert eng3.index_sizes() == eng.index_sizes()
+
+
+def test_mmap_loading(tmp_path):
+    eng = _engine(n_releases=20)
+    eng.save(str(tmp_path / "idx"))
+    manifest = json.loads((tmp_path / "idx" / "manifest.json").read_text())
+    npz = str(tmp_path / "idx" / manifest["arrays_file"])
+    arrs = load_arrays(npz, mmap=True)
+    assert all(isinstance(a, np.memmap) for a in arrs.values())
+    plain = load_arrays(npz, mmap=False)
+    for k in plain:
+        np.testing.assert_array_equal(np.asarray(arrs[k]), plain[k])
+
+
+def test_save_is_atomic_against_crash(tmp_path):
+    """A torn re-save (arrays written, manifest not) must serve the old index."""
+    eng = _engine(n_releases=10)
+    eng.save(str(tmp_path / "idx"))
+    kws = QUERIES["Q7"][1]
+    want = eng.query(kws, backend="scalar")
+    first = json.loads((tmp_path / "idx" / "manifest.json").read_text())
+    # simulate a crash mid-save: a new arrays file appears without a manifest
+    (tmp_path / "idx" / "arrays-deadbeef.npz").write_bytes(b"garbage")
+    got = KeywordSearchEngine.load(str(tmp_path / "idx")).query(kws, backend="jax")
+    np.testing.assert_array_equal(got, want)
+    # a completed save removes exactly the previously-committed arrays file
+    eng.save(str(tmp_path / "idx"))
+    second = json.loads((tmp_path / "idx" / "manifest.json").read_text())
+    assert (tmp_path / "idx" / second["arrays_file"]).exists()
+    assert not (tmp_path / "idx" / first["arrays_file"]).exists()
+    got = KeywordSearchEngine.load(str(tmp_path / "idx")).query(kws, backend="jax")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tree_only_artifact(tmp_path):
+    tree = generate_discogs_tree(n_releases=20, seed=1)
+    eng = KeywordSearchEngine(tree, build_dag=False)
+    eng.save(str(tmp_path / "idx"))
+    eng2 = KeywordSearchEngine.load(str(tmp_path / "idx"))
+    assert eng2.cluster is None
+    kws = QUERIES["Q7"][1]
+    np.testing.assert_array_equal(
+        eng2.query(kws, index="tree", backend="scalar"),
+        eng.query(kws, index="tree", backend="scalar"),
+    )
+
+
+def test_format_version_guard(tmp_path):
+    eng = _engine(n_releases=10)
+    eng.save(str(tmp_path / "idx"))
+    mpath = tmp_path / "idx" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["format_version"] = FORMAT_VERSION + 1
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="format_version"):
+        KeywordSearchEngine.load(str(tmp_path / "idx"))

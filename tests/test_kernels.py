@@ -6,6 +6,8 @@ Hypothesis drives randomized sorted inputs.
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional test dep (see pyproject [test])
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

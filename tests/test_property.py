@@ -5,6 +5,9 @@ subtrees) so DAG compression, dummy nodes, nested RCs, and offset splicing
 are all exercised; hypothesis drives sizes/seeds/queries.
 """
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional test dep (see pyproject [test])
 from hypothesis import given, settings, strategies as st
 
 from repro.core import KeywordSearchEngine, NodeSpec, build_tree

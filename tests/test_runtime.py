@@ -214,3 +214,7 @@ def test_gradient_compression_error_feedback():
     deq2, _ = compress_grads_with_feedback(g, resid)
     total = np.asarray(deq["w"] + deq2["w"])
     np.testing.assert_allclose(total, 2 * np.asarray(g["w"]), atol=2 * scale)
+    # container tuples in the grad tree must not be mistaken for leaf pairs
+    gt = {"layer": (jnp.ones((4,)), 2.0 * jnp.ones((4,)))}
+    deq_t, _ = compress_grads_with_feedback(gt, None)
+    np.testing.assert_allclose(np.asarray(deq_t["layer"][1]), 2.0, atol=0.1)

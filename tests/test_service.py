@@ -1,0 +1,118 @@
+"""QueryService + PlanCache behaviour.
+
+Covers: concurrent service results equal sequential engine.query on every
+paper query x both semantics; the PlanCache serves the second same-shaped
+window without any new executable (stable jit cache size, zero new misses);
+mixed-semantics windows; unknown keywords; stats surface.
+"""
+import numpy as np
+import pytest
+
+from repro.core import KeywordSearchEngine, PlanCache
+from repro.data import QUERIES, generate_discogs_tree
+from repro.serve import QueryService
+
+
+@pytest.fixture(scope="module")
+def engine() -> KeywordSearchEngine:
+    return KeywordSearchEngine(generate_discogs_tree(n_releases=60, seed=7))
+
+
+QS = [kws for _, kws in QUERIES.values()]
+
+
+def test_service_matches_sequential(engine):
+    with QueryService(engine, max_batch=32, batch_window_ms=2.0) as svc:
+        for sem in ("slca", "elca"):
+            got = svc.map(QS, semantics=sem)
+            for kws, res in zip(QS, got):
+                np.testing.assert_array_equal(
+                    res,
+                    engine.query(kws, semantics=sem, backend="scalar"),
+                    err_msg=f"{kws} {sem}",
+                )
+
+
+def test_plan_cache_reused_across_service_calls(engine):
+    """Second same-shaped window: zero new compiles, zero new plan misses."""
+    with QueryService(engine, max_batch=32, batch_window_ms=2.0) as svc:
+        first = svc.map(QS, semantics="slca")  # warm: compiles what it needs
+        misses0 = engine.plan_cache.misses
+        launches0 = engine.plan_cache.launches
+        execs0 = PlanCache.executable_count()
+        second = svc.map(QS, semantics="slca")
+        assert engine.plan_cache.misses == misses0, "second call compiled a new plan"
+        if execs0 >= 0:  # -1 = jit introspection unavailable on this jax
+            assert PlanCache.executable_count() == execs0, "jit cache grew"
+        hits = engine.plan_cache.launches - launches0
+        assert hits > 0 and engine.plan_cache.hits >= hits
+    for a, b in zip(first, second):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_mixed_semantics_window(engine):
+    with QueryService(engine, max_batch=32, batch_window_ms=5.0) as svc:
+        futs = [
+            svc.submit(QS[0], "slca"),
+            svc.submit(QS[3], "elca"),
+            svc.submit(QS[6], "slca"),
+        ]
+        want = [
+            engine.query(QS[0], semantics="slca", backend="scalar"),
+            engine.query(QS[3], semantics="elca", backend="scalar"),
+            engine.query(QS[6], semantics="slca", backend="scalar"),
+        ]
+        for f, w in zip(futs, want):
+            np.testing.assert_array_equal(f.result(timeout=120), w)
+
+
+def test_unknown_keyword_resolves_empty(engine):
+    with QueryService(engine) as svc:
+        assert svc.query(["zzz-not-a-word"]).size == 0
+
+
+def test_bad_semantics_rejected(engine):
+    with QueryService(engine) as svc:
+        with pytest.raises(ValueError, match="semantics"):
+            svc.submit(QS[0], "lca")
+
+
+def test_stats_surface(engine):
+    with QueryService(engine, max_batch=8, batch_window_ms=1.0) as svc:
+        svc.map(QS, semantics="slca")
+        stats = svc.stats().summary()
+    assert stats["queries"] == len(QS)
+    assert stats["batches"] >= 1 and stats["launches"] >= 1
+    assert stats["p99_ms"] >= stats["p50_ms"] > 0
+    assert 0.0 <= stats["plan_hit_rate"] <= 1.0
+
+
+def test_submit_after_close_raises(engine):
+    svc = QueryService(engine)
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(QS[0])
+
+
+def test_plan_cache_row_bucketing():
+    """Different work-item counts in the same R bucket share one plan."""
+    from repro.core.idlist import IDList
+
+    def lst(ids):
+        ids = np.asarray(ids, np.int32)
+        return IDList(
+            ids=ids,
+            pidpos=np.full(ids.shape, -1, np.int32),
+            ndesc=np.ones(ids.shape, np.int32),
+        )
+
+    item = [lst([1, 5, 9]), lst([1, 5, 7, 9])]
+    plan = PlanCache()
+    r3 = plan.run([item] * 3, ["a", "b", "c"], semantics="slca")
+    assert plan.misses == 1 and plan.launches == 1
+    r4 = plan.run([item] * 4, ["a", "b", "c", "d"], semantics="slca")  # R 3->4,
+    assert plan.misses == 1, "same R bucket must not re-pack a new plan"  # same bucket
+    assert plan.hits == 1
+    np.testing.assert_array_equal(r3["a"], r4["d"])
+    r5 = plan.run([item] * 5, list("abcde"), semantics="slca")  # R=5 -> bucket 8
+    assert plan.misses == 2 and plan.hits == 1
