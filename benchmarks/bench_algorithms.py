@@ -5,8 +5,9 @@ queries.  Paper claims: DAG overhead on cat-1 for every algorithm; significant
 DAG wins on cat-3; backward generally beats forward except the DAG-SLCA
 variants (DAG compression already removes most of what parent-skipping wins).
 """
-from .common import emit, engine_for, time_query
 from repro.data import QUERIES
+
+from .common import emit, engine_for, time_query
 
 ALGOS = [
     ("FwdSLCA", "fwd_slca", "slca"),

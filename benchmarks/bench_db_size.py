@@ -4,8 +4,9 @@ The paper halves the discogs dump repeatedly (0.8..12.6GB); we scale the
 synthetic catalog geometrically.  Claim: search time grows with size for both
 algorithms; the base/DAG ratio stays roughly constant.
 """
-from .common import N_RELEASES, emit, engine_for, time_query
 from repro.data import QUERIES
+
+from .common import N_RELEASES, emit, engine_for, time_query
 
 
 def run() -> dict:

@@ -7,9 +7,9 @@ that deduped prefill logits match naive per-request prefill.
 """
 import numpy as np
 
-from .common import emit
-
 from repro.serve.prefix_dag import plan_batch
+
+from .common import emit
 
 
 def make_batch(r=32, templates=4, sys_len=160, tmpl_len=96, user_len=24, seed=0):

@@ -13,10 +13,11 @@ import time
 
 import numpy as np
 
-from .common import N_RELEASES, emit, engine_for
 from repro.core import search_vec
 from repro.core.search_dag import dag_search_vec
 from repro.data import QUERIES
+
+from .common import N_RELEASES, emit, engine_for
 
 
 def _time(fn, repeats=5):

@@ -8,9 +8,10 @@ with the same savings measure over the per-RC IDLists.
 """
 import numpy as np
 
-from .common import emit, engine_for
 from repro.core import brute, search_base
 from repro.data import QUERIES
+
+from .common import emit, engine_for
 
 
 def _dag_result_count(eng, kws, algorithm) -> int:

@@ -7,8 +7,9 @@ TPUs.  Correctness equivalence is asserted on every row.
 """
 import numpy as np
 
-from .common import emit, engine_for, time_query
 from repro.data import QUERIES
+
+from .common import emit, engine_for, time_query
 
 
 def run() -> dict:

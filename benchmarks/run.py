@@ -5,12 +5,40 @@ BENCH_RELEASES (default 2000 releases ~ 100k nodes), BENCH_REPEATS.
 
 ``--smoke`` shrinks every knob (tiny corpus, one repeat, sub-second service
 sweep) so CI and local sanity checks share this entry point and finish in
-seconds; it must stay fast enough to run on every push.
+seconds; it must stay fast enough to run on every push.  (The cluster
+section keeps its own corpus floor — sharding a toy corpus measures
+nothing — so it dominates smoke wall time.)
+
+``--json PATH`` additionally writes every section's rows to a machine-
+readable file (CI uploads it as a workflow artifact, so perf history is
+diffable across runs).
 """
 import argparse
+import json
 import os
 import sys
 import time
+
+
+class _Tee:
+    """Mirror stdout while collecting lines for the JSON report."""
+
+    def __init__(self, stream):
+        self.stream = stream
+        self.lines: list[str] = []
+        self._buf = ""
+
+    def write(self, text: str) -> int:
+        self.stream.write(text)
+        self._buf += text
+        while "\n" in self._buf:
+            line, self._buf = self._buf.split("\n", 1)
+            if line:
+                self.lines.append(line)
+        return len(text)
+
+    def flush(self) -> None:
+        self.stream.flush()
 
 
 def main(argv=None) -> int:
@@ -23,6 +51,10 @@ def main(argv=None) -> int:
         "--section", default=None,
         help="run only sections whose title contains this substring",
     )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write the rows of every section to a JSON report",
+    )
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -34,6 +66,7 @@ def main(argv=None) -> int:
     from . import (
         bench_algorithms,
         bench_category,
+        bench_cluster,
         bench_db_size,
         bench_index_size,
         bench_prefix_dag,
@@ -55,14 +88,34 @@ def main(argv=None) -> int:
         ("beyond-paper: search perf hillclimb", bench_search_hillclimb),
         ("beyond-paper: prefix-DAG serving dedup", bench_prefix_dag),
         ("beyond-paper: query service throughput", bench_service),
+        ("beyond-paper: cluster scatter-gather throughput", bench_cluster),
     ]
     if args.section:
         sections = [(t, m) for t, m in sections if args.section in t]
     t0 = time.time()
+    report = {"smoke": bool(args.smoke), "sections": []}
     for title, mod in sections:
         print(f"# --- {title} ---", flush=True)
-        mod.run()
-    print(f"# done in {time.time() - t0:.1f}s", flush=True)
+        tee = _Tee(sys.stdout)
+        sys.stdout = tee
+        try:
+            t_sec = time.time()
+            mod.run()
+        finally:
+            sys.stdout = tee.stream
+        report["sections"].append(
+            {
+                "title": title,
+                "rows": tee.lines,
+                "elapsed_s": round(time.time() - t_sec, 2),
+            }
+        )
+    report["elapsed_s"] = round(time.time() - t0, 2)
+    print(f"# done in {report['elapsed_s']}s", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {args.json}", flush=True)
     return 0
 
 

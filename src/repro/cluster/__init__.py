@@ -1,0 +1,32 @@
+"""Sharded serving cluster: partitioned DAG indices behind one front door.
+
+    tree = generate_discogs_tree(n_releases=2000)
+    build_cluster(tree, num_shards=4, path="/var/idx/cluster")
+
+    with ClusterService.from_dir("/var/idx/cluster") as svc:
+        fut = svc.submit(["vinyl", "electronic"], semantics="slca")
+        print(fut.result())
+        print(svc.stats().summary())
+
+See :mod:`repro.cluster.partition` for the partitioning/exactness story,
+:mod:`repro.cluster.router` for scatter-gather semantics, and
+:mod:`repro.cluster.admission` for overload behaviour.
+"""
+from .admission import AdmissionController, Overloaded
+from .manifest import RoutingTable, build_cluster, load_cluster
+from .partition import ShardSpec, partition_corpus, shard_tree, split_doc_ranges
+from .router import ClusterService, ShardWorker
+
+__all__ = [
+    "AdmissionController",
+    "ClusterService",
+    "Overloaded",
+    "RoutingTable",
+    "ShardSpec",
+    "ShardWorker",
+    "build_cluster",
+    "load_cluster",
+    "partition_corpus",
+    "shard_tree",
+    "split_doc_ranges",
+]

@@ -1,0 +1,152 @@
+"""Cluster artifacts: build once, route from anywhere.
+
+Directory layout (published through :mod:`repro.core.io`):
+
+    <path>/cluster.json               shard specs + file names (commit point)
+    <path>/routing-<token>.npz        keyword->shard bitmap + vocab + root kws
+    <path>/shard-<token>-0000/ ...    one ordinary index artifact per shard
+
+``build_cluster`` writes shard directories and the routing npz under
+fresh *unique* (per-publish token) names, then swaps ``cluster.json`` in —
+the same crash-safe publish discipline as single-index artifacts.  Because
+no publish ever writes into a directory the committed manifest names, a
+half-written republish is never observable: the old manifest keeps naming
+only old, untouched files, and a re-publish over a live-served cluster never
+tears it.  The previous publish is reclaimed only after the new commit.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import io as index_io
+from repro.core.engine import KeywordSearchEngine
+from repro.core.xml_tree import Vocab, XMLTree
+
+from .partition import ShardSpec, routing_arrays, shard_tree, split_doc_ranges
+
+
+@dataclass
+class RoutingTable:
+    """Keyword -> shard bitmap plus the corpus root's own keywords.
+
+    ``masks[kid]`` bit ``s`` set iff shard ``s``'s documents contain keyword
+    ``kid``; ``root_kw_ids`` are the corpus root's direct keywords (present
+    in every shard's root replica, deliberately *not* in the bitmap).
+    """
+
+    vocab: Vocab
+    masks: np.ndarray  # uint64[K]
+    root_kw_ids: np.ndarray  # int32, sorted
+
+    def kw_ids(self, keywords: list[str] | str) -> list[int]:
+        if isinstance(keywords, str):
+            keywords = keywords.split()
+        return [self.vocab.get(w) for w in keywords]
+
+    def fanout(self, kw_ids: list[int]) -> int:
+        """Bitmask of shards whose documents contain *every* keyword."""
+        mask = ~np.uint64(0)
+        for k in kw_ids:
+            mask &= self.masks[k]
+        return int(mask)
+
+    def doc_presence(self, kw_id: int) -> int:
+        """Bitmask of shards whose documents contain the keyword at all."""
+        return int(self.masks[kw_id])
+
+    def at_root(self, kw_id: int) -> bool:
+        i = int(np.searchsorted(self.root_kw_ids, kw_id))
+        return i < self.root_kw_ids.size and int(self.root_kw_ids[i]) == kw_id
+
+
+def _vocab_blob(vocab: Vocab) -> np.ndarray:
+    blob = "\n".join(vocab.id_to_word).encode("utf-8")
+    return np.frombuffer(blob, dtype=np.uint8)
+
+
+def _vocab_from_blob(arr: np.ndarray) -> Vocab:
+    blob = bytes(np.asarray(arr))
+    words = blob.decode("utf-8").split("\n") if blob else []
+    return Vocab(word_to_id={w: i for i, w in enumerate(words)}, id_to_word=words)
+
+
+def build_cluster(tree: XMLTree, num_shards: int, path: str) -> dict:
+    """Partition ``tree``, index every shard, and publish a cluster artifact.
+
+    Returns the manifest dict that was committed.  Every publish writes its
+    shard directories and routing file under fresh unique names and commits
+    them by swapping ``cluster.json`` — so a crash mid-republish leaves the
+    previous cluster fully intact (its manifest still names only the old
+    files), and live readers keep their mmaps of the old inodes.  The
+    previous publish's shard directories are reclaimed only after the new
+    manifest is durably committed.
+    """
+    os.makedirs(path, exist_ok=True)
+    prev_dirs: list[str] = []
+    try:
+        prev = index_io.load_cluster_manifest(path)
+        prev_dirs = [obj["dir"] for obj in prev["shards"]]
+    except (OSError, ValueError, KeyError):
+        pass  # first publish, or unreadable/old-format manifest
+    token = os.urandom(4).hex()
+    specs = split_doc_ranges(tree, num_shards)
+    shard_dirs = [f"shard-{token}-{spec.index:04d}" for spec in specs]
+    for spec, d in zip(specs, shard_dirs):
+        engine = KeywordSearchEngine.from_tree(shard_tree(tree, spec))
+        engine.save(os.path.join(path, d))
+    masks, root_kw_ids = routing_arrays(tree, specs)
+    routing_file = f"routing-{token}.npz"
+    np.savez(
+        os.path.join(path, routing_file),
+        vocab_blob=_vocab_blob(tree.vocab),
+        masks=masks,
+        root_kw_ids=root_kw_ids,
+    )
+    with open(os.path.join(path, routing_file), "rb") as f:
+        os.fsync(f.fileno())
+    manifest = {
+        "num_shards": len(specs),
+        "num_docs": int(specs[-1].doc_hi),
+        "num_nodes": tree.num_nodes,
+        "num_keywords": len(tree.vocab),
+        "routing_file": routing_file,
+        "shards": [
+            dict(spec.to_json(), dir=d) for spec, d in zip(specs, shard_dirs)
+        ],
+    }
+    index_io.save_cluster_manifest(path, manifest)
+    for d in prev_dirs:  # reclaim only what the *previous* manifest named
+        if d not in shard_dirs:
+            shutil.rmtree(os.path.join(path, d), ignore_errors=True)
+    return manifest
+
+
+def load_cluster(
+    path: str, mmap: bool = True
+) -> tuple[list[tuple[ShardSpec, KeywordSearchEngine]], RoutingTable, dict]:
+    """Open a cluster artifact: [(spec, engine)], routing table, manifest.
+
+    Shard arrays stay memory-mapped (``mmap=True``), so N router processes
+    share one page-cache copy of every shard index.
+    """
+    manifest = index_io.load_cluster_manifest(path)
+    arrs = index_io.load_arrays(
+        os.path.join(path, manifest["routing_file"]), mmap=mmap
+    )
+    routing = RoutingTable(
+        vocab=_vocab_from_blob(arrs["vocab_blob"]),
+        masks=np.asarray(arrs["masks"]),
+        root_kw_ids=np.asarray(arrs["root_kw_ids"]),
+    )
+    shards = []
+    for obj in manifest["shards"]:
+        spec = ShardSpec.from_json(obj)
+        engine = KeywordSearchEngine.load(
+            os.path.join(path, obj["dir"]), mmap=mmap
+        )
+        shards.append((spec, engine))
+    return shards, routing, manifest

@@ -1,0 +1,171 @@
+"""Corpus partitioner: one big tree -> N per-shard DAG indices.
+
+A corpus tree is a root whose children are *documents* (the discogs
+``<releases>`` root with one subtree per ``<release>``).  The partitioner
+assigns **contiguous document ranges** to shards, balanced by node count, and
+builds each shard's tree as
+
+    local 0              a replica of the corpus root (same direct keywords)
+    local 1..            the shard's documents, in corpus preorder
+
+Contiguity is what keeps the scatter-gather exact *and* cheap: the documents
+of shard ``s`` occupy one global preorder interval ``[node_start, node_end)``,
+so every non-root local id maps to its original corpus id with a single
+integer add (``global = local + node_start - 1``) — no per-node tables.
+Because documents never span shards, every result node below the corpus root
+is produced by exactly one shard with within-document semantics identical to
+the monolith; only the corpus root itself needs cross-shard reasoning, which
+the router reconstructs from the routing table and per-shard document stats
+(see :mod:`repro.cluster.router` for the proof sketch and
+``tests/test_cluster.py`` for the machine-checked equivalence).
+
+Routing: per keyword id, a bitmask of the shards whose *documents* contain it
+(the replicated root's direct keywords are tracked separately — they exist in
+every shard and would otherwise smear the bitmap).  A query can only match
+inside a shard that contains every keyword, so the router fans out to the AND
+of the masks.  Shard count is capped at 64 to keep the mask one uint64 wide.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.engine import KeywordSearchEngine
+from repro.core.xml_tree import XMLTree
+
+MAX_SHARDS = 64
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """One shard's slice of the corpus (all ranges half-open)."""
+
+    index: int
+    doc_lo: int  # first document ordinal
+    doc_hi: int  # one past the last document ordinal
+    node_start: int  # global preorder id of the first document node
+    node_end: int  # one past the last document node
+
+    @property
+    def id_offset(self) -> int:
+        """shard-local id (>0) + id_offset == global corpus id."""
+        return self.node_start - 1
+
+    @property
+    def num_docs(self) -> int:
+        return self.doc_hi - self.doc_lo
+
+    def to_json(self) -> dict:
+        return {
+            "index": self.index,
+            "doc_lo": self.doc_lo,
+            "doc_hi": self.doc_hi,
+            "node_start": self.node_start,
+            "node_end": self.node_end,
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "ShardSpec":
+        return cls(
+            index=int(obj["index"]),
+            doc_lo=int(obj["doc_lo"]),
+            doc_hi=int(obj["doc_hi"]),
+            node_start=int(obj["node_start"]),
+            node_end=int(obj["node_end"]),
+        )
+
+
+def doc_roots(tree: XMLTree) -> np.ndarray:
+    """Global preorder ids of the corpus documents (children of the root)."""
+    return np.where(tree.parent == 0)[0].astype(np.int64)
+
+
+def split_doc_ranges(tree: XMLTree, num_shards: int) -> list[ShardSpec]:
+    """Contiguous document ranges, balanced by total node count per shard."""
+    roots = doc_roots(tree)
+    n_docs = roots.size
+    if n_docs == 0:
+        raise ValueError("corpus tree has no documents (root has no children)")
+    num_shards = max(1, min(int(num_shards), n_docs, MAX_SHARDS))
+    sizes = tree.subtree_size[roots].astype(np.int64)
+    cum = np.cumsum(sizes)
+    # cut at the ideal node-count fractions, then clamp so the cuts stay
+    # strictly increasing and every shard keeps at least one document
+    # (num_shards <= n_docs makes both clamps always satisfiable)
+    bounds = [0]
+    for s in range(1, num_shards):
+        c = int(np.searchsorted(cum, cum[-1] * s / num_shards, side="left")) + 1
+        c = max(c, bounds[-1] + 1)
+        c = min(c, n_docs - (num_shards - s))
+        bounds.append(c)
+    bounds.append(n_docs)
+    specs = []
+    for s in range(num_shards):
+        lo, hi = bounds[s], bounds[s + 1]
+        start = int(roots[lo])
+        end = int(roots[hi]) if hi < n_docs else tree.num_nodes
+        specs.append(ShardSpec(s, lo, hi, start, end))
+    return specs
+
+
+def shard_tree(tree: XMLTree, spec: ShardSpec) -> XMLTree:
+    """Materialize one shard's tree by slicing the corpus arrays.
+
+    The shard shares the corpus :class:`Vocab` object, so keyword ids are
+    identical across shards and the routing bitmap indexes all of them.
+    """
+    g0, g1 = spec.node_start, spec.node_end
+    span = g1 - g0
+    parent = np.empty(span + 1, dtype=np.int32)
+    parent[0] = -1
+    gp = tree.parent[g0:g1]
+    # document roots keep the replica root as parent; everyone else shifts
+    parent[1:] = np.where(gp == 0, 0, gp - spec.id_offset)
+    subtree = np.empty(span + 1, dtype=np.int32)
+    subtree[0] = span + 1
+    subtree[1:] = tree.subtree_size[g0:g1]
+    root_kws = tree.direct_keywords(0)
+    k0, k1 = tree.kw_offsets[g0], tree.kw_offsets[g1]
+    kw_offsets = np.empty(span + 2, dtype=np.int64)
+    kw_offsets[0] = 0
+    kw_offsets[1:] = tree.kw_offsets[g0 : g1 + 1] - k0 + root_kws.size
+    kw_ids = np.concatenate([root_kws, tree.kw_ids[k0:k1]]).astype(np.int32)
+    return XMLTree(parent, subtree, kw_offsets, kw_ids, tree.vocab)
+
+
+def routing_arrays(
+    tree: XMLTree, specs: list[ShardSpec]
+) -> tuple[np.ndarray, np.ndarray]:
+    """(masks, root_kw_ids): per-keyword shard bitmap + the root's own kws.
+
+    ``masks[kid]`` has bit ``s`` set iff some *document* of shard ``s``
+    contains keyword ``kid``.  The corpus root's direct keywords are excluded
+    here (they are replicated into every shard) and reported separately.
+    """
+    masks = np.zeros(len(tree.vocab), dtype=np.uint64)
+    for spec in specs:
+        k0 = tree.kw_offsets[spec.node_start]
+        k1 = tree.kw_offsets[spec.node_end]
+        present = np.unique(tree.kw_ids[k0:k1])
+        masks[present] |= np.uint64(1) << np.uint64(spec.index)
+    root_kw_ids = np.unique(tree.direct_keywords(0)).astype(np.int32)
+    return masks, root_kw_ids
+
+
+def partition_corpus(
+    tree: XMLTree, num_shards: int
+) -> tuple[list[tuple[ShardSpec, KeywordSearchEngine]], np.ndarray, np.ndarray]:
+    """Split + index in-process: [(spec, engine)], routing masks, root kws.
+
+    Each shard gets its own DAG/IDCluster build and its own PlanCache — this
+    is the in-memory twin of :func:`repro.cluster.manifest.build_cluster`,
+    used by tests and benchmarks that don't need the artifact round-trip.
+    """
+    specs = split_doc_ranges(tree, num_shards)
+    shards = [
+        (spec, KeywordSearchEngine.from_tree(shard_tree(tree, spec)))
+        for spec in specs
+    ]
+    masks, root_kw_ids = routing_arrays(tree, specs)
+    return shards, masks, root_kw_ids

@@ -1,0 +1,404 @@
+"""ClusterService: scatter-gather keyword search over sharded DAG indices.
+
+One router fronts N shard workers.  Each worker is an ordinary
+:class:`~repro.serve.service.QueryService` (microbatching drain + PlanCache)
+over that shard's DAG index, with its own backend ("scalar" | "jax" |
+"pallas").  A query's life:
+
+  1. keywords resolve against the cluster routing table; the fanout is the
+     AND of the per-keyword shard bitmaps — only shards whose documents
+     contain *every* keyword can produce a match, everyone else is skipped;
+  2. identical in-flight queries coalesce (single-flight request
+     coalescing): a burst of one hot query costs one execution, Zipfian
+     traffic being the serving norm;
+  3. admission control takes one slot on every fanout shard or sheds the
+     query with a typed :class:`Overloaded` (all-or-nothing, so a saturated
+     shard only sheds traffic actually routed at it);
+  4. the query is submitted to every fanout shard's service; the last shard
+     future to complete merges on its drain thread and fans the result out
+     to every coalesced caller.
+
+Exactness (ELCA/SLCA semantics are preserved, machine-checked in
+tests/test_cluster.py): documents never span shards, and each shard tree is
+the corpus tree restricted to the root + that shard's documents, so every
+node below the corpus root lives in exactly one shard and its SLCA/ELCA
+status depends only on within-document structure — per-shard results, mapped
+back through the contiguous id offset, are exactly the monolith's non-root
+results.  Only the corpus root needs cross-shard reasoning:
+
+  * root is an SLCA  iff  every keyword occurs somewhere in the corpus and
+    no deeper common ancestor exists — i.e. the merged non-root result set
+    is empty;
+  * root is an ELCA  iff  every keyword also occurs *outside* the subtrees
+    of the root's descendant common ancestors.  Those descendant-CA subtrees
+    are exactly the documents containing all keywords ("full" documents,
+    CA-ness being ancestor-closed within a document), so the residual check
+    per keyword k reduces to:  k is a root keyword, or k occurs in a shard
+    outside the fanout (such shards cannot contain full documents), or the
+    fanout shards together have more documents containing k than full
+    documents.  Workers report the two document counts per query.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+
+import numpy as np
+
+from repro.core.engine import KeywordSearchEngine, QueryStats
+from repro.core.xml_tree import XMLTree
+from repro.serve.service import QueryService
+
+from .admission import AdmissionController, Overloaded
+from .manifest import RoutingTable, load_cluster
+from .partition import ShardSpec, partition_corpus
+
+_EMPTY = np.zeros(0, dtype=np.int64)
+
+
+class ShardWorker:
+    """One shard: engine + drain service + document-level query stats."""
+
+    def __init__(
+        self,
+        spec: ShardSpec,
+        engine: KeywordSearchEngine,
+        *,
+        backend: str = "jax",
+        max_batch: int = 64,
+        batch_window_ms: float = 2.0,
+    ):
+        self.spec = spec
+        self.engine = engine
+        self.service = QueryService(
+            engine,
+            max_batch=max_batch,
+            batch_window_ms=batch_window_ms,
+            backend=backend,
+        )
+        # local ids of this shard's document roots (children of the replica
+        # root), ascending — the probe set for doc_stats
+        self._doc_roots = np.where(engine.tree.parent == 0)[0].astype(np.int64)
+
+    def submit(self, keywords: list[str], semantics: str) -> Future:
+        return self.service.submit(keywords, semantics)
+
+    def doc_stats(self, kw_ids: list[int]) -> tuple[np.ndarray, int]:
+        """(#docs containing each keyword, #docs containing all of them).
+
+        Pure reads of the shard's containment table (thread-safe); one
+        searchsorted of the doc-root set per keyword.
+        """
+        ct = self.engine.base.containment
+        roots = self._doc_roots
+        present = np.zeros((len(kw_ids), roots.size), dtype=bool)
+        for j, k in enumerate(kw_ids):
+            nodes, _ = ct.slice_for(k)
+            if nodes.size:
+                pos = np.minimum(
+                    np.searchsorted(nodes, roots), nodes.size - 1
+                )
+                present[j] = nodes[pos] == roots
+        return present.sum(axis=1), int(present.all(axis=0).sum())
+
+    def close(self) -> None:
+        self.service.close()
+
+
+class _Gather:
+    """Mutable scatter-gather state for one admitted (coalesced) query."""
+
+    __slots__ = (
+        "key", "futures", "kw_ids", "semantics", "shards", "fanout_mask",
+        "all_present", "t0s", "remaining", "results", "error", "lock",
+    )
+
+    def __init__(self, key, future, kw_ids, semantics, shards, fanout_mask,
+                 all_present, t0):
+        self.key = key
+        self.futures = [future]
+        self.kw_ids = kw_ids
+        self.semantics = semantics
+        self.shards = shards
+        self.fanout_mask = fanout_mask
+        self.all_present = all_present
+        self.t0s = [t0]
+        self.remaining = len(shards)
+        self.results: dict[int, np.ndarray] = {}
+        self.error: BaseException | None = None
+        self.lock = threading.Lock()
+
+
+class ClusterService:
+    """Sharded serving front door: route, scatter, gather, merge."""
+
+    def __init__(
+        self,
+        shards: list[tuple[ShardSpec, KeywordSearchEngine]],
+        routing: RoutingTable,
+        *,
+        backends: str | list[str] = "jax",
+        max_batch: int = 64,
+        batch_window_ms: float = 2.0,
+        max_queue_per_shard: int = 256,
+    ):
+        if isinstance(backends, str):
+            backends = [backends] * len(shards)
+        if len(backends) != len(shards):
+            raise ValueError(
+                f"{len(shards)} shards but {len(backends)} backends"
+            )
+        self.routing = routing
+        self.workers = [
+            ShardWorker(
+                spec,
+                engine,
+                backend=be,
+                max_batch=max_batch,
+                batch_window_ms=batch_window_ms,
+            )
+            for (spec, engine), be in zip(shards, backends)
+        ]
+        self.admission = AdmissionController(len(self.workers), max_queue_per_shard)
+        self._lock = threading.Lock()
+        self._closed = False
+        self._inflight: dict[tuple, _Gather] = {}
+        self._stats = QueryStats(
+            data={
+                "queries": 0,
+                "fanout_submits": 0,
+                "root_results": 0,
+                "coalesced": 0,
+            }
+        )
+
+    # ------------------------------------------------------------------ #
+    # Construction
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_dir(cls, path: str, mmap: bool = True, **kw) -> "ClusterService":
+        """Serve a published cluster artifact (shard arrays stay mmapped)."""
+        shards, routing, _ = load_cluster(path, mmap=mmap)
+        return cls(shards, routing, **kw)
+
+    @classmethod
+    def from_tree(
+        cls, tree: XMLTree, num_shards: int, **kw
+    ) -> "ClusterService":
+        """Partition + index + serve in-process (tests and benchmarks)."""
+        shards, masks, root_kw_ids = partition_corpus(tree, num_shards)
+        routing = RoutingTable(
+            vocab=tree.vocab, masks=masks, root_kw_ids=root_kw_ids
+        )
+        return cls(shards, routing, **kw)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.workers)
+
+    # ------------------------------------------------------------------ #
+    # Admission + scatter
+    # ------------------------------------------------------------------ #
+    def submit(self, keywords: list[str] | str, semantics: str = "slca") -> Future:
+        """Route one query; the Future resolves to sorted corpus node ids.
+
+        Raises :class:`Overloaded` *synchronously* when admission sheds the
+        query — the caller gets backpressure, not a doomed future.
+
+        Identical in-flight queries are *coalesced* (single-flight): callers
+        asking for a (keywords, semantics) pair that is already being
+        scatter-gathered attach to the running execution instead of spawning
+        a duplicate — hot queries cost one execution per burst, they are
+        never shed, and take no extra admission slots.  Exactness is free:
+        the index is immutable while served, so equal queries have equal
+        results.
+        """
+        if semantics not in ("slca", "elca"):
+            raise ValueError(f"semantics must be slca|elca, got {semantics!r}")
+        if isinstance(keywords, str):
+            keywords = keywords.split()
+        fut: Future = Future()
+        t0 = time.perf_counter()
+        kw_ids = self.routing.kw_ids(keywords)
+        key = (tuple(kw_ids), semantics)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("submit() on a closed ClusterService")
+            self._stats.data["queries"] += 1
+            running = self._inflight.get(key)
+            if running is not None:  # join the in-flight execution
+                running.futures.append(fut)
+                running.t0s.append(t0)
+                self._stats.data["coalesced"] += 1
+                return fut
+        if not kw_ids or any(k < 0 for k in kw_ids):
+            # unknown keyword: no document (and not the root) can match
+            self._finish([fut], _EMPTY, [t0])
+            return fut
+        fanout_mask = self.routing.fanout(kw_ids)
+        shards = [s for s in range(self.num_shards) if fanout_mask >> s & 1]
+        all_present = all(
+            self.routing.doc_presence(k) != 0 or self.routing.at_root(k)
+            for k in kw_ids
+        )
+        if not shards:
+            # no shard holds every keyword => no full document anywhere =>
+            # the corpus root is the only candidate (both semantics; see
+            # module docstring)
+            res = np.zeros(1, dtype=np.int64) if all_present else _EMPTY
+            if res.size:
+                with self._lock:
+                    self._stats.data["root_results"] += 1
+            self._finish([fut], res, [t0])
+            return fut
+        self.admission.acquire(shards)  # raises Overloaded on a full shard
+        state = _Gather(key, fut, kw_ids, semantics, shards, fanout_mask,
+                        all_present, t0)
+        with self._lock:
+            self._inflight[key] = state
+            self._stats.data["fanout_submits"] += len(shards)
+        for s in shards:
+            try:
+                shard_fut = self.workers[s].submit(keywords, semantics)
+            except Exception as e:  # worker closed/dead: fail this shard
+                self._on_shard_done(state, s, None, e)
+                continue
+            shard_fut.add_done_callback(
+                lambda f, s=s: self._on_shard_done(
+                    state, s, f, f.exception()
+                )
+            )
+        return fut
+
+    def query(self, keywords: list[str] | str, semantics: str = "slca") -> np.ndarray:
+        return self.submit(keywords, semantics).result()
+
+    def map(
+        self, queries: list[list[str] | str], semantics: str = "slca"
+    ) -> list[np.ndarray]:
+        futs = [self.submit(q, semantics) for q in queries]
+        return [f.result() for f in futs]
+
+    # ------------------------------------------------------------------ #
+    # Gather + merge
+    # ------------------------------------------------------------------ #
+    def _on_shard_done(self, state: _Gather, shard: int, fut, exc) -> None:
+        with state.lock:
+            if exc is not None:
+                state.error = state.error or exc
+            else:
+                state.results[shard] = fut.result()
+            state.remaining -= 1
+            last = state.remaining == 0
+        if last:
+            self._finalize(state)
+
+    def _finalize(self, state: _Gather) -> None:
+        self.admission.release(state.shards)
+        # un-publish BEFORE delivering: submits holding the service lock
+        # either joined (their future is in state.futures now) or will start
+        # a fresh execution after this pop
+        with self._lock:
+            self._inflight.pop(state.key, None)
+        if state.error is not None:
+            for fut in state.futures:
+                try:
+                    fut.set_exception(state.error)
+                except InvalidStateError:
+                    pass
+            return
+        merged = self._merge(state)
+        self._finish(state.futures, merged, state.t0s)
+
+    def _merge(self, state: _Gather) -> np.ndarray:
+        parts = []
+        for s in state.shards:
+            res = state.results[s]
+            # local id 0 is the shard's root replica: its status is a
+            # statement about this shard only, recomputed globally below
+            res = res[res != 0]
+            parts.append(res + self.workers[s].spec.id_offset)
+        merged = np.sort(np.concatenate(parts)) if parts else _EMPTY
+        if state.semantics == "slca":
+            root = merged.size == 0 and state.all_present
+        else:
+            root = state.all_present and self._root_is_elca(state)
+        if root:
+            merged = np.concatenate([np.zeros(1, dtype=np.int64), merged])
+            with self._lock:
+                self._stats.data["root_results"] += 1
+        return merged
+
+    def _root_is_elca(self, state: _Gather) -> bool:
+        """Residual check: every keyword occurs outside all full documents."""
+        docs_k = np.zeros(len(state.kw_ids), dtype=np.int64)
+        full = 0
+        for s in state.shards:
+            dk, f = self.workers[s].doc_stats(state.kw_ids)
+            docs_k += dk
+            full += f
+        for j, k in enumerate(state.kw_ids):
+            if self.routing.at_root(k):
+                continue  # the root's own keyword is always residual
+            if self.routing.doc_presence(k) & ~state.fanout_mask:
+                continue  # occurs in a shard with no full documents
+            if docs_k[j] > full:
+                continue  # fanout shards have non-full documents with k
+            return False
+        return True
+
+    def _finish(
+        self, futs: list[Future], result: np.ndarray, t0s: list[float]
+    ) -> None:
+        done = time.perf_counter()
+        with self._lock:
+            for t0 in t0s:
+                self._stats.record_latency((done - t0) * 1e3)
+        for fut in futs:
+            try:
+                fut.set_result(result)
+            except InvalidStateError:
+                pass  # caller cancelled; nothing to deliver
+
+    # ------------------------------------------------------------------ #
+    # Stats / lifecycle
+    # ------------------------------------------------------------------ #
+    def stats(self) -> QueryStats:
+        """Cluster rollup: router counters + admission + shard aggregates."""
+        with self._lock:
+            snap = QueryStats(
+                data=dict(self._stats.data),
+                latencies_ms=list(self._stats.latencies_ms),
+            )
+        snap.data.update(self.admission.snapshot())
+        # QueryStats.merge sums the shard counters and recomputes the
+        # plan hit rate from the merged hits/launches
+        agg = QueryStats.merge([w.service.stats() for w in self.workers])
+        snap.data.update(
+            {
+                "shard_launches": agg.data.get("launches", 0),
+                "shard_batches": agg.data.get("batches", 0),
+                "queue_depth": agg.data.get("queue_depth", 0),
+                "plan_launches_total": agg.data.get("plan_launches_total", 0),
+                "plan_hits": agg.data.get("plan_hits", 0),
+                "plan_misses": agg.data.get("plan_misses", 0),
+                "plans": agg.data.get("plans", 0),
+                "rows_padded": agg.data.get("rows_padded", 0),
+                "plan_hit_rate": agg.data.get("plan_hit_rate", 0.0),
+            }
+        )
+        return snap
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Stop admitting, then drain every shard worker."""
+        with self._lock:
+            self._closed = True
+        for w in self.workers:
+            w.service.close(timeout)
+
+    def __enter__(self) -> "ClusterService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -3,13 +3,13 @@
 Public API: :class:`KeywordSearchEngine`, plus the index/search building
 blocks for power users (BaseIndex, IDClusterIndex, search algorithms).
 """
-from .engine import KeywordSearchEngine, QueryStats
-from .xml_tree import XMLTree, NodeSpec, Vocab, build_tree, parse
-from .idlist import BaseIndex, IDList, build_containment
+from . import brute, io, search_base, search_vec
 from .components import IDClusterIndex, build_indices
 from .dag import compress
+from .engine import KeywordSearchEngine, QueryStats
+from .idlist import BaseIndex, IDList, build_containment
 from .plan_cache import PlanCache
-from . import brute, io, search_base, search_vec
+from .xml_tree import NodeSpec, Vocab, XMLTree, build_tree, parse
 
 __all__ = [
     "KeywordSearchEngine",

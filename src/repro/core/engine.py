@@ -64,6 +64,35 @@ class QueryStats:
             out["p99_ms"] = round(self.percentile(99), 3)
         return out
 
+    @classmethod
+    def merge(cls, parts: "list[QueryStats]") -> "QueryStats":
+        """Aggregate stats across workers (cluster-level rollup).
+
+        Numeric counters sum key-wise; derived ``*_rate`` gauges are ratios
+        (summing them is nonsense) so they are recomputed from the merged
+        counters where possible — ``plan_hit_rate`` from hits/launches —
+        and dropped otherwise.  Non-numeric values keep the first
+        occurrence; latency samples concatenate (still bounded by
+        ``record_latency`` on later appends).
+        """
+        merged = cls()
+        for part in parts:
+            for key, val in part.data.items():
+                if key.endswith("_rate"):
+                    continue
+                if isinstance(val, bool) or not isinstance(val, (int, float)):
+                    merged.data.setdefault(key, val)
+                else:
+                    merged.data[key] = merged.data.get(key, 0) + val
+            merged.latencies_ms.extend(part.latencies_ms)
+        launches = merged.data.get("plan_launches_total", 0)
+        if launches:
+            merged.data["plan_hit_rate"] = round(
+                merged.data.get("plan_hits", 0) / launches, 4
+            )
+        del merged.latencies_ms[: -cls.MAX_LATENCIES]
+        return merged
+
 
 class KeywordSearchEngine:
     def __init__(

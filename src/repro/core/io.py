@@ -38,6 +38,30 @@ from .xml_tree import Vocab, XMLTree
 FORMAT_VERSION = 1
 _MANIFEST = "manifest.json"
 
+CLUSTER_FORMAT_VERSION = 1
+_CLUSTER_MANIFEST = "cluster.json"
+
+
+def commit_json(dir_path: str, name: str, obj: dict) -> None:
+    """Atomically publish ``obj`` as ``<dir_path>/<name>``.
+
+    The json lands in a temp file, is fsynced, and ``os.replace``d into place
+    as the single commit point; the directory entry is fsynced afterwards so
+    the rename itself is durable.  Readers always see either the previous
+    complete document or the new one, never a torn write.
+    """
+    tmp = os.path.join(dir_path, f".{name}.tmp")
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(dir_path, name))
+    dirfd = os.open(dir_path, os.O_RDONLY)
+    try:
+        os.fsync(dirfd)
+    finally:
+        os.close(dirfd)
+
 
 class _CSRLists:
     """Lazy list-of-lists view over CSR (offsets, flat) arrays.
@@ -143,17 +167,7 @@ def save_parts(
         "num_canonical": int(dag.num_canonical) if dag is not None else 0,
         "array_names": sorted(arrays),
     }
-    tmp_manifest = os.path.join(path, f".{_MANIFEST}.tmp")
-    with open(tmp_manifest, "w") as f:
-        json.dump(manifest, f, indent=1, sort_keys=True)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp_manifest, os.path.join(path, _MANIFEST))
-    dirfd = os.open(path, os.O_RDONLY)
-    try:
-        os.fsync(dirfd)  # make the new arrays entry + manifest rename durable
-    finally:
-        os.close(dirfd)
+    commit_json(path, _MANIFEST, manifest)
     # unlink only the arrays file the *previous* manifest named (open mmaps
     # keep its inode alive); concurrent writers may orphan a file but can
     # never delete the committed one out from under the current manifest
@@ -288,3 +302,55 @@ def load_parts(path: str, mmap: bool = True):
         ),
     )
     return tree, containment, dag, rcs, manifest
+
+
+# ---------------------------------------------------------------------- #
+# Cluster manifests
+# ---------------------------------------------------------------------- #
+#
+# A *cluster* artifact is a directory of per-shard index artifacts plus one
+# routing npz, all named by a top-level ``cluster.json``:
+#
+#     <path>/cluster.json               shard specs + file names (commit point)
+#     <path>/routing-<token>.npz        keyword -> shard bitmap, vocab, root kws
+#     <path>/shard-<token>-0000/ ...    ordinary index artifacts (per publish)
+#
+# Shard directories and the routing file carry a fresh per-publish token and
+# are written first, then ``cluster.json`` is swapped in with
+# :func:`commit_json` — no publish writes into files the committed manifest
+# names, so a crash mid-(re)publish leaves the previous cluster fully
+# readable.  The version policy mirrors the per-shard format: any change to
+# the manifest keys, the routing array names, or their semantics bumps
+# ``CLUSTER_FORMAT_VERSION``, and loaders reject mismatches.
+
+
+def save_cluster_manifest(path: str, manifest: dict) -> None:
+    """Atomically publish a cluster manifest (stamps the format version)."""
+    os.makedirs(path, exist_ok=True)
+    prev_routing = None
+    try:
+        with open(os.path.join(path, _CLUSTER_MANIFEST)) as f:
+            prev_routing = json.load(f).get("routing_file")
+    except (OSError, ValueError):
+        pass  # first publish, or unreadable old manifest
+    manifest = dict(manifest, cluster_format_version=CLUSTER_FORMAT_VERSION)
+    commit_json(path, _CLUSTER_MANIFEST, manifest)
+    # reclaim the routing file the previous manifest named (open mmaps keep
+    # its inode alive), same policy as save_parts for arrays files
+    if prev_routing and prev_routing != manifest.get("routing_file"):
+        try:
+            os.unlink(os.path.join(path, prev_routing))
+        except OSError:
+            pass
+
+
+def load_cluster_manifest(path: str) -> dict:
+    with open(os.path.join(path, _CLUSTER_MANIFEST)) as f:
+        manifest = json.load(f)
+    version = manifest.get("cluster_format_version")
+    if version != CLUSTER_FORMAT_VERSION:
+        raise ValueError(
+            f"cluster artifact {path}: cluster_format_version {version} "
+            f"(this build reads {CLUSTER_FORMAT_VERSION})"
+        )
+    return manifest

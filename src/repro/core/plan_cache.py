@@ -22,9 +22,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-import numpy as np
-
 import jax.numpy as jnp
+import numpy as np
 
 from .idlist import IDList
 from .search_vec import INT_PAD, bucket, ca_search_batch

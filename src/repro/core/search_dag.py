@@ -88,6 +88,7 @@ def dag_search_vec_multi(
     index: IDClusterIndex,
     queries: list[list[int]],
     semantics: str = "slca",
+    backend: str = "xla",
     stats: dict | None = None,
     plan: PlanCache | None = None,
 ) -> list[np.ndarray]:
@@ -99,6 +100,11 @@ def dag_search_vec_multi(
     3) — and the cache's R-bucketing keeps the jit executable set shared
     across *calls*, not just rounds.  Memoisation is per query (different
     keyword sets ⇒ different RC results).
+
+    ``backend`` picks the membership kernel *inside* the shared jitted batch
+    search ("xla", or "pallas" once :mod:`repro.kernels.ops` has registered
+    it); either way every launch flows through the PlanCache, whose plan keys
+    carry the backend name.
     """
     plan = _plan_or_default(plan)
     launches0 = plan.launches
@@ -115,7 +121,7 @@ def dag_search_vec_multi(
         nxt: list[tuple[int, int]] = []
         for _, items in by_k.items():
             per_item = [index.idlists(rc, queries[qi]) for qi, rc in items]
-            results = plan.run(per_item, items, semantics=semantics)
+            results = plan.run(per_item, items, semantics=semantics, backend=backend)
             for qi, rc in items:
                 res = results[(qi, rc)]
                 memos[qi][rc] = res

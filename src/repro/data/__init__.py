@@ -1,3 +1,3 @@
-from .xmlgen import DiscogsConfig, QUERIES, generate_discogs_tree
+from .xmlgen import QUERIES, DiscogsConfig, generate_discogs_tree
 
 __all__ = ["DiscogsConfig", "QUERIES", "generate_discogs_tree"]

@@ -20,9 +20,8 @@ from __future__ import annotations
 
 from functools import lru_cache
 
-import numpy as np
-
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.idlist import IDList

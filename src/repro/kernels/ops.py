@@ -10,10 +10,11 @@ CPU (how this container validates them).
 """
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.idlist import IDList
+from repro.core.search_vec import register_membership_backend
 
 from .elca_segsum import elca_segsum_pallas_call
 from .intersect import membership_pallas_call
@@ -98,6 +99,34 @@ def searchsorted_positions(
         jnp.asarray(a_p), jnp.asarray(q_p), bq=bq, ba=ba, interpret=interpret
     )
     return np.minimum(np.asarray(pos)[:nq], na)
+
+
+def membership_pallas(sorted_arr, valid_len, queries):
+    """Jit-traceable membership backend built on the searchsorted kernel.
+
+    Registered as the ``"pallas"`` entry of the search_vec membership
+    registry so the *batched* jitted search (``ca_search_batch`` behind the
+    PlanCache) can run its intersection hot loop in Pallas: unlike
+    :func:`intersect_membership`, which computes window starts on the host,
+    this variant uses the windowless block-counting searchsorted kernel and
+    therefore stays traceable under jit and vmap.  Contract matches
+    ``membership_xla``: ``pos`` is only meaningful where ``found`` holds, and
+    pad queries report not-found (pos == valid_len fails the bound check).
+    """
+    m = int(sorted_arr.shape[0])
+    pos = searchsorted_pallas_call(
+        sorted_arr,
+        queries,
+        bq=min(512, queries.shape[0]),
+        ba=min(512, m),
+        interpret=INTERPRET,
+    ).astype(jnp.int32)
+    pos_c = jnp.minimum(pos, m - 1)
+    found = (pos < valid_len) & (sorted_arr[pos_c] == queries)
+    return found, pos_c
+
+
+register_membership_backend("pallas", membership_pallas)
 
 
 def elca_child_sums(

@@ -1,12 +1,5 @@
 from .config import MLAConfig, ModelConfig, MoEConfig, SSMConfig
-from .model import (
-    decode_step,
-    forward,
-    init_cache,
-    init_params,
-    lm_loss,
-    prefill,
-)
+from .model import decode_step, forward, init_cache, init_params, lm_loss, prefill
 
 __all__ = [
     "MLAConfig",

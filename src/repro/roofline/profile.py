@@ -11,7 +11,7 @@ from __future__ import annotations
 import re
 from collections import Counter
 
-from .analysis import _SHAPE_RE, _DTYPE_BYTES, _shape_bytes
+from .analysis import _DTYPE_BYTES, _SHAPE_RE, _shape_bytes
 
 _OP_RE = re.compile(r"^[%\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(")
 

@@ -17,6 +17,13 @@ its own batch.  This service is the admission path in front of it:
 Thread model: one daemon drain thread per service.  The engine itself is
 only touched from the drain thread, so no engine-level locking is needed.
 
+``backend`` picks how a window is drained: "jax" (default) and "pallas" run
+the batched vectorized DAG search through the engine's PlanCache (the pallas
+variant swaps the membership kernel inside the same jitted body), "scalar"
+runs the paper-faithful host algorithms query-by-query.  One service per
+shard with per-shard backends is exactly the multi-backend drain the cluster
+router (:mod:`repro.cluster`) builds on.
+
     with QueryService(engine, batch_window_ms=2.0) as svc:
         futs = [svc.submit(q) for q in queries]
         results = [f.result() for f in futs]
@@ -32,7 +39,15 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.engine import KeywordSearchEngine, QueryStats
+from repro.core.search_base import dag_search
 from repro.core.search_dag import dag_search_vec_multi
+
+# drain backends: how one admission window reaches the index.  "jax" and
+# "pallas" both run the batched vectorized search through the engine's
+# PlanCache (the backend name is part of each plan key; "pallas" swaps the
+# membership kernel inside the same jitted body), "scalar" runs the
+# paper-faithful host algorithms per query (no batching, no device).
+_BACKENDS = {"scalar": None, "jax": "xla", "xla": "xla", "pallas": "pallas"}
 
 
 @dataclass
@@ -51,10 +66,20 @@ class QueryService:
         engine: KeywordSearchEngine,
         max_batch: int = 64,
         batch_window_ms: float = 2.0,
+        backend: str = "jax",
     ):
         if engine.cluster is None:
             raise ValueError("QueryService needs an engine with the DAG index")
+        if backend not in _BACKENDS:
+            raise ValueError(
+                f"backend must be one of {sorted(_BACKENDS)}, got {backend!r}"
+            )
+        if backend == "pallas":
+            # importing the kernel package registers the "pallas" membership
+            # backend with search_vec; without it the first drain would fail
+            from repro.kernels import ops as _kernel_ops  # noqa: F401
         self.engine = engine
+        self.backend = backend
         self.max_batch = int(max_batch)
         self.batch_window_s = float(batch_window_ms) / 1e3
         self._pending: list[_Pending] = []
@@ -79,8 +104,17 @@ class QueryService:
         fut: Future = Future()
         item = _Pending(self.engine.keyword_ids(keywords), semantics, fut)
         with self._wake:
+            # the closed check lives under the same lock close() takes, so a
+            # submit racing close() either lands in the final drain window or
+            # raises here — it can never enqueue onto a stopped drain thread
+            # and hang its caller.  A dead drain thread (crashed, or the
+            # interpreter is tearing down daemon threads) is the same story.
             if self._closed:
-                raise RuntimeError("QueryService is closed")
+                raise RuntimeError("submit() on a closed QueryService")
+            if not self._thread.is_alive():
+                raise RuntimeError(
+                    "QueryService drain thread is not running (closed or died)"
+                )
             self._pending.append(item)
             self._wake.notify()
         return fut
@@ -100,14 +134,27 @@ class QueryService:
     # Stats / lifecycle
     # ------------------------------------------------------------------ #
     def stats(self) -> QueryStats:
-        """Snapshot of service counters + the engine plan cache."""
+        """Snapshot of service counters + queue depth + the engine plan cache.
+
+        ``queue_depth`` (currently admitted-but-undrained queries) and the
+        plan-cache hit/miss/launch counters all land in ``data`` so
+        ``summary()`` — and any cluster-level rollup via
+        :meth:`QueryStats.merge` — sees them as plain numeric counters.
+        """
         with self._lock:
             snap = QueryStats(
                 data=dict(self._stats.data),
                 latencies_ms=list(self._stats.latencies_ms),
             )
+            snap.data["queue_depth"] = len(self._pending)
         snap.data.update(self.engine.plan_cache.snapshot())
         return snap
+
+    @property
+    def queue_depth(self) -> int:
+        """Queries admitted but not yet drained (cheap, lock-held read)."""
+        with self._lock:
+            return len(self._pending)
 
     def close(self, timeout: float = 30.0) -> None:
         """Drain outstanding queries, then stop the worker thread."""
@@ -178,12 +225,23 @@ class QueryService:
 
     def _run_group(self, semantics: str, items: list[_Pending]) -> None:
         try:
-            results = dag_search_vec_multi(
-                self.engine.cluster,
-                [it.kws for it in items],
-                semantics=semantics,
-                plan=self.engine.plan_cache,
-            )
+            if self.backend == "scalar":
+                results = [
+                    dag_search(
+                        self.engine.cluster, it.kws, algorithm=f"fwd_{semantics}"
+                    )
+                    if all(k >= 0 for k in it.kws)
+                    else np.zeros(0, dtype=np.int64)
+                    for it in items
+                ]
+            else:
+                results = dag_search_vec_multi(
+                    self.engine.cluster,
+                    [it.kws for it in items],
+                    semantics=semantics,
+                    backend=_BACKENDS[self.backend],
+                    plan=self.engine.plan_cache,
+                )
         except Exception as e:  # surface the failure on every waiter
             for it in items:
                 self._deliver(it.future, exc=e)

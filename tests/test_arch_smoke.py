@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import CONFIGS, cell_applicable
-from repro.models import init_cache, init_params, lm_loss, prefill, decode_step
+from repro.models import decode_step, init_cache, init_params, lm_loss, prefill
 from repro.train.optimizer import adamw_init, adamw_update
 
 ARCHS = sorted(CONFIGS)

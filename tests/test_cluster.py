@@ -1,0 +1,381 @@
+"""Sharded cluster: partitioner invariants, scatter-gather exactness,
+admission control, and the cluster artifact round-trip.
+
+The load-bearing property is *byte-identical results*: ClusterService over
+{1, 2, 4} shards must return exactly what one monolithic engine returns on
+the same corpus, for both semantics, across backends — including the corpus
+root, whose SLCA/ELCA status is the only cross-shard case (reconstructed by
+the router from routing bits + per-shard document stats).
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterService,
+    Overloaded,
+    build_cluster,
+    partition_corpus,
+    shard_tree,
+    split_doc_ranges,
+)
+from repro.core import KeywordSearchEngine, NodeSpec, build_tree
+from repro.data import QUERIES, generate_discogs_tree
+
+N_RELEASES = 30
+
+# paper queries + the cross-shard / root-only / selective edge cases
+EXTRA_QUERIES = [
+    ["releases"],  # corpus-root-only keyword
+    ["release"],  # present in every document root
+    ["uk", "japan"],  # countries usually in different docs => root or empty
+    ["electronic", "jazz", "reggae"],  # 3 genres, rarely one doc
+    ["img-3.jpg", "vinyl"],  # unique leaf: routes to exactly one shard
+    ["zzz-not-a-word"],
+    ["vinyl"],
+]
+ALL_QUERIES = [kws for _, kws in QUERIES.values()] + EXTRA_QUERIES
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_discogs_tree(n_releases=N_RELEASES, seed=5)
+
+
+@pytest.fixture(scope="module")
+def mono(corpus):
+    return KeywordSearchEngine(corpus)
+
+
+@pytest.fixture(scope="module")
+def expected(mono):
+    return {
+        (i, sem): mono.query(q, semantics=sem, backend="scalar")
+        for i, q in enumerate(ALL_QUERIES)
+        for sem in ("slca", "elca")
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Partitioner
+# --------------------------------------------------------------------------- #
+
+
+def test_split_doc_ranges_contiguous_and_balanced(corpus):
+    for ns in (1, 2, 3, 4, 7):
+        specs = split_doc_ranges(corpus, ns)
+        assert len(specs) == ns
+        assert specs[0].doc_lo == 0 and specs[-1].doc_hi == N_RELEASES
+        assert specs[0].node_start == 1 and specs[-1].node_end == corpus.num_nodes
+        for a, b in zip(specs, specs[1:]):
+            assert a.doc_hi == b.doc_lo and a.node_end == b.node_start
+            assert a.num_docs >= 1
+        sizes = [s.node_end - s.node_start for s in specs]
+        assert max(sizes) <= 2 * (corpus.num_nodes - 1) / ns + max(
+            corpus.subtree_size[1:].max(), 1
+        )
+
+
+def test_split_clamps_to_doc_count(corpus):
+    specs = split_doc_ranges(corpus, 1000)
+    assert len(specs) == N_RELEASES
+    assert all(s.num_docs == 1 for s in specs)
+
+
+def test_shard_tree_structure(corpus):
+    for spec in split_doc_ranges(corpus, 4):
+        st = shard_tree(corpus, spec)
+        st.validate()
+        assert st.num_nodes == spec.node_end - spec.node_start + 1
+        # the replica root carries the corpus root's direct keywords
+        np.testing.assert_array_equal(
+            st.direct_keywords(0), corpus.direct_keywords(0)
+        )
+        # id mapping: local i (>0) is global i + id_offset, arrays aligned
+        glo = np.arange(spec.node_start, spec.node_end)
+        np.testing.assert_array_equal(
+            st.subtree_size[1:], corpus.subtree_size[glo]
+        )
+        for local in (1, st.num_nodes - 1):
+            np.testing.assert_array_equal(
+                st.direct_keywords(local),
+                corpus.direct_keywords(local + spec.id_offset),
+            )
+
+
+def test_partition_covers_every_node(corpus):
+    shards, masks, root_kws = partition_corpus(corpus, 4)
+    total = sum(e.tree.num_nodes - 1 for _, e in shards)
+    assert total == corpus.num_nodes - 1
+    # routing masks: a keyword present in some document has some shard bit
+    assert masks.shape == (len(corpus.vocab),)
+    kid = corpus.vocab.get("vinyl")
+    assert masks[kid] != 0
+    root_only = corpus.vocab.get("releases")
+    assert masks[root_only] == 0 and root_only in root_kws
+
+
+# --------------------------------------------------------------------------- #
+# Cluster == monolith (the acceptance property)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("backend", ["scalar", "jax", "pallas"])
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_cluster_matches_monolith(corpus, expected, num_shards, backend):
+    """The acceptance matrix: shard counts x backends x semantics.
+
+    The jax drain covers the full query set; the scalar and (interpret-mode)
+    pallas drains cover a representative subset to bound suite runtime."""
+    queries = ALL_QUERIES if backend == "jax" else ALL_QUERIES[:4] + ALL_QUERIES[9:]
+    idx = [ALL_QUERIES.index(q) for q in queries]
+    with ClusterService.from_tree(
+        corpus, num_shards, backends=backend, batch_window_ms=1.0
+    ) as svc:
+        assert svc.num_shards == num_shards
+        for sem in ("slca", "elca"):
+            got = svc.map(queries, semantics=sem)
+            for i, res in zip(idx, got):
+                assert res.dtype == np.int64
+                np.testing.assert_array_equal(
+                    res, expected[(i, sem)],
+                    err_msg=f"shards={num_shards} {backend} {sem} {ALL_QUERIES[i]}",
+                )
+
+
+def test_cluster_mixed_backends_match(corpus, expected):
+    """Heterogeneous drains in one cluster: scalar + pallas workers."""
+    queries = ALL_QUERIES[:6]
+    with ClusterService.from_tree(
+        corpus, 2, backends=["scalar", "pallas"], batch_window_ms=1.0
+    ) as svc:
+        for sem in ("slca", "elca"):
+            got = svc.map(queries, semantics=sem)
+            for i, res in enumerate(got):
+                np.testing.assert_array_equal(
+                    res, expected[(i, sem)], err_msg=f"{sem} {queries[i]}"
+                )
+
+
+def _doc(label, words):
+    return NodeSpec(label, children=[NodeSpec("w", w) for w in words])
+
+
+ROOT_CASES = [
+    # (docs, query): crafted corpus-root edge cases
+    ([("d", "a b"), ("d", "a"), ("d", "b")], ["a", "b"]),  # full doc + root ELCA
+    ([("d", "a b"), ("d", "a")], ["a", "b"]),  # full doc, root NOT ELCA
+    ([("d", "a"), ("d", "b")], ["a", "b"]),  # no full doc => root SLCA
+    ([("d", "a"), ("d", "a")], ["a", "b"]),  # keyword b missing => empty
+    ([("d", "a"), ("d", "b"), ("d", "c")], ["a", "b", "c"]),
+    ([("d", "a b c"), ("d", "b"), ("d", "c")], ["b", "c"]),
+    ([("d", "a"), ("d", "b")], ["root", "a"]),  # root label keyword
+]
+
+
+@pytest.mark.parametrize("docs,query", ROOT_CASES)
+@pytest.mark.parametrize("num_shards", [2, 3])
+def test_root_fixup_crafted(docs, query, num_shards):
+    tree = build_tree(
+        NodeSpec("root", children=[_doc(label, text.split()) for label, text in docs])
+    )
+    mono = KeywordSearchEngine(tree)
+    num_shards = min(num_shards, len(docs))
+    with ClusterService.from_tree(tree, num_shards, batch_window_ms=0.5) as svc:
+        for sem in ("slca", "elca"):
+            want = mono.query(query, semantics=sem, backend="scalar")
+            got = svc.query(query, semantics=sem)
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"{docs} {query} {sem} shards={num_shards}"
+            )
+
+
+def test_random_corpora_match():
+    """Small random corpora with a tiny vocabulary maximize cross-document
+    interactions (full docs, partial docs, root residuals)."""
+    rng = np.random.default_rng(0)
+    words = list("abcdef")
+    for trial in range(4):
+        docs = []
+        for _ in range(int(rng.integers(6, 12))):
+            n_words = int(rng.integers(1, 4))
+            picks = rng.choice(words, size=n_words, replace=True)
+            kids = [NodeSpec("v", " ".join(rng.choice(words, size=2)))
+                    for _ in range(int(rng.integers(0, 3)))]
+            docs.append(NodeSpec("doc", " ".join(picks), children=kids))
+        tree = build_tree(NodeSpec("corpus", children=docs))
+        mono = KeywordSearchEngine(tree)
+        queries = [list(rng.choice(words, size=k, replace=False))
+                   for k in (1, 2, 2, 3)]
+        for num_shards in (1, 2, 4):
+            with ClusterService.from_tree(
+                tree, num_shards, batch_window_ms=0.5
+            ) as svc:
+                for sem in ("slca", "elca"):
+                    for q in queries:
+                        want = mono.query(q, semantics=sem, backend="scalar")
+                        got = svc.query(q, semantics=sem)
+                        np.testing.assert_array_equal(
+                            got, want,
+                            err_msg=f"trial={trial} shards={num_shards} {sem} {q}",
+                        )
+
+
+# --------------------------------------------------------------------------- #
+# Admission control
+# --------------------------------------------------------------------------- #
+
+
+def test_admission_sheds_typed_and_recovers(corpus):
+    q = ALL_QUERIES[0]
+    svc = ClusterService.from_tree(
+        corpus, 2, max_queue_per_shard=1,
+        max_batch=64, batch_window_ms=60_000.0,  # park the drain: queue fills
+    )
+    try:
+        first = svc.submit(q, "slca")
+        # a *different* query must shed (an identical one would coalesce)
+        with pytest.raises(Overloaded) as exc_info:
+            svc.submit(ALL_QUERIES[3], "slca")
+        assert exc_info.value.limit == 1
+        assert 0 <= exc_info.value.shard < 2
+        # the identical query coalesces instead of shedding
+        joined = svc.submit(q, "slca")
+        snap = svc.stats().summary()
+        assert snap["shed"] == 1 and snap["admitted"] == 1
+        assert snap["coalesced"] == 1
+        assert snap["queue_depth_max"] == 1
+    finally:
+        svc.close()  # drains the parked window; the admitted query completes
+    want = KeywordSearchEngine(corpus).query(q, backend="scalar")
+    np.testing.assert_array_equal(first.result(timeout=120), want)
+    np.testing.assert_array_equal(joined.result(timeout=120), want)
+    # slots released after completion: a fresh service admits again
+    snap = svc.stats().summary()
+    assert snap["queue_depth_per_shard"] == [0, 0]
+
+
+def test_admission_slot_release(corpus):
+    with ClusterService.from_tree(
+        corpus, 2, max_queue_per_shard=1, batch_window_ms=0.5
+    ) as svc:
+        for _ in range(5):  # sequential: each completes, each admits
+            svc.query(ALL_QUERIES[3], "slca")
+        snap = svc.stats().summary()
+        assert snap["shed"] == 0 and snap["admitted"] == 5
+
+
+def test_coalescing_single_flight(corpus, expected):
+    """A burst of one hot query is one execution, one result for all."""
+    q = ALL_QUERIES[0]
+    with ClusterService.from_tree(
+        corpus, 2, batch_window_ms=20.0  # wide window: the burst overlaps
+    ) as svc:
+        futs = [svc.submit(q, "slca") for _ in range(16)]
+        results = [f.result(timeout=120) for f in futs]
+        s = svc.stats().summary()
+    for res in results:
+        np.testing.assert_array_equal(res, expected[(0, "slca")])
+    assert s["queries"] == 16
+    assert s["coalesced"] >= 14  # almost all joined the first execution
+    assert s["admitted"] <= 2
+    assert s["queries_timed"] == 16  # every caller's latency is recorded
+
+
+def test_cluster_submit_after_close_raises(corpus):
+    svc = ClusterService.from_tree(corpus, 2)
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(ALL_QUERIES[0])
+
+
+def test_cluster_stats_aggregate(corpus):
+    with ClusterService.from_tree(corpus, 2, batch_window_ms=1.0) as svc:
+        svc.map([kws for _, kws in QUERIES.values()], semantics="slca")
+        s = svc.stats().summary()
+    assert s["queries"] == len(QUERIES)
+    assert s["fanout_submits"] >= s["admitted"] >= 1
+    assert s["plan_launches_total"] >= 1
+    assert s["plan_hits"] + s["plan_misses"] == s["plan_launches_total"]
+    assert 0.0 <= s["plan_hit_rate"] <= 1.0
+    assert s["queue_depth"] == 0
+    assert s["p99_ms"] >= s["p50_ms"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# Artifacts
+# --------------------------------------------------------------------------- #
+
+
+def test_cluster_artifact_roundtrip(tmp_path, corpus, expected):
+    path = str(tmp_path / "cluster")
+    manifest = build_cluster(corpus, 2, path)
+    assert manifest["num_shards"] == 2
+    assert manifest["num_docs"] == N_RELEASES
+    queries = ALL_QUERIES[:8]
+    with ClusterService.from_dir(path, batch_window_ms=1.0) as svc:
+        for sem in ("slca", "elca"):
+            for i, res in enumerate(svc.map(queries, semantics=sem)):
+                np.testing.assert_array_equal(res, expected[(i, sem)])
+
+
+def test_cluster_manifest_version_rejected(tmp_path, corpus):
+    import json
+    import os
+
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    mpath = os.path.join(path, "cluster.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["cluster_format_version"] = 999
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="cluster_format_version"):
+        ClusterService.from_dir(path)
+
+
+def test_cluster_republish_over_live(tmp_path, corpus):
+    """Re-publishing must not tear a cluster that is being served, and must
+    reclaim the previous publish's shard directories after committing."""
+    import os
+
+    path = str(tmp_path / "cluster")
+    m1 = build_cluster(corpus, 2, path)
+    old_dirs = [obj["dir"] for obj in m1["shards"]]
+    with ClusterService.from_dir(path, batch_window_ms=1.0) as svc:
+        before = svc.query(ALL_QUERIES[0], "slca")
+        build_cluster(corpus, 4, path)  # republish under the reader
+        after = svc.query(ALL_QUERIES[0], "slca")
+        np.testing.assert_array_equal(before, after)
+    with ClusterService.from_dir(path) as svc2:
+        assert svc2.num_shards == 4
+    for d in old_dirs:
+        assert not os.path.exists(os.path.join(path, d)), d
+
+
+def test_cluster_crashed_republish_is_invisible(tmp_path, corpus, expected,
+                                                monkeypatch):
+    """A republish that dies before the manifest commit must leave the
+    previous cluster fully intact — fresh loads serve the old, correct
+    content (regression: shard dirs were re-used across publishes, so a
+    crash left the old manifest pointing at new shard trees)."""
+    from repro.cluster import manifest as manifest_mod
+    from repro.core import io as index_io
+
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+
+    def boom(*a, **kw):
+        raise OSError("simulated crash before the manifest commit")
+
+    monkeypatch.setattr(index_io, "save_cluster_manifest", boom)
+    with pytest.raises(OSError, match="simulated"):
+        manifest_mod.build_cluster(corpus, 4, path)
+    monkeypatch.undo()
+
+    with ClusterService.from_dir(path, batch_window_ms=1.0) as svc:
+        assert svc.num_shards == 2
+        for i in (0, 3):
+            np.testing.assert_array_equal(
+                svc.query(ALL_QUERIES[i], "slca"), expected[(i, "slca")]
+            )

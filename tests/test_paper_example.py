@@ -28,8 +28,8 @@ import pytest
 from repro.core import (
     KeywordSearchEngine,
     NodeSpec,
-    build_tree,
     build_indices,
+    build_tree,
     compress,
 )
 from repro.core import brute, search_base

@@ -94,6 +94,98 @@ def test_submit_after_close_raises(engine):
         svc.submit(QS[0])
 
 
+def test_submit_after_close_is_immediate(engine):
+    """The rejection must not depend on drain-thread teardown timing: it
+    raises even when the drain thread is long gone, and close() is
+    idempotent."""
+    svc = QueryService(engine)
+    svc.close()
+    svc.close()  # second close is a no-op, not an error
+    assert not svc._thread.is_alive()
+    for _ in range(3):
+        with pytest.raises(RuntimeError, match="closed"):
+            svc.submit(QS[0])
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.query(QS[0])
+
+
+def test_submit_after_context_exit_raises(engine):
+    with QueryService(engine) as svc:
+        svc.query(QS[0])
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(QS[0])
+
+
+def test_queue_depth_surfaces_in_stats(engine):
+    svc = QueryService(engine, max_batch=64, batch_window_ms=60_000.0)
+    try:
+        assert svc.queue_depth == 0
+        futs = [svc.submit(QS[0]), svc.submit(QS[1])]
+        # parked drain window: both queries sit in the admission queue
+        assert svc.queue_depth == 2
+        assert svc.stats().summary()["queue_depth"] == 2
+    finally:
+        svc.close()
+    for f in futs:
+        assert f.result(timeout=120) is not None
+    assert svc.stats().summary()["queue_depth"] == 0
+
+
+def test_plan_counters_in_summary(engine):
+    with QueryService(engine, batch_window_ms=1.0) as svc:
+        svc.map(QS, semantics="slca")
+        s = svc.stats().summary()
+    for key in ("plan_launches_total", "plan_hits", "plan_misses", "queue_depth"):
+        assert key in s, key
+    assert s["plan_hits"] + s["plan_misses"] == s["plan_launches_total"]
+
+
+@pytest.mark.parametrize("backend", ["scalar", "pallas"])
+def test_service_backends_match_scalar(engine, backend):
+    queries = QS[:4]
+    with QueryService(engine, backend=backend, batch_window_ms=1.0) as svc:
+        for sem in ("slca", "elca"):
+            got = svc.map(queries, semantics=sem)
+            for kws, res in zip(queries, got):
+                np.testing.assert_array_equal(
+                    res,
+                    engine.query(kws, semantics=sem, backend="scalar"),
+                    err_msg=f"{backend} {kws} {sem}",
+                )
+
+
+def test_service_rejects_unknown_backend(engine):
+    with pytest.raises(ValueError, match="backend"):
+        QueryService(engine, backend="cuda")
+
+
+def test_query_stats_merge():
+    from repro.core import QueryStats
+
+    a = QueryStats(
+        data={
+            "queries": 2, "plan_hits": 3, "plan_launches_total": 4,
+            "plan_hit_rate": 0.75, "note": "x",
+        }
+    )
+    a.latencies_ms = [1.0, 2.0]
+    b = QueryStats(
+        data={
+            "queries": 5, "plan_hits": 0, "plan_misses": 4,
+            "plan_launches_total": 4, "plan_hit_rate": 0.0,
+        }
+    )
+    b.latencies_ms = [3.0]
+    merged = QueryStats.merge([a, b])
+    assert merged.data["queries"] == 7
+    assert merged.data["plan_hits"] == 3
+    assert merged.data["plan_misses"] == 4
+    assert merged.data["note"] == "x"
+    # ratios are recomputed from merged counters, never summed
+    assert merged.data["plan_hit_rate"] == round(3 / 8, 4)
+    assert merged.latencies_ms == [1.0, 2.0, 3.0]
+
+
 def test_plan_cache_row_bucketing():
     """Different work-item counts in the same R bucket share one plan."""
     from repro.core.idlist import IDList

@@ -4,11 +4,10 @@ These are the integration seams: corpus -> engine -> queries across all
 backends; training loop end-to-end on a reduced arch (loss decreases);
 dry-run lowering on a host-scale mesh; benchmark harness sanity.
 """
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 
 def test_search_system_end_to_end():
