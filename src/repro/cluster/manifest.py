@@ -64,7 +64,7 @@ class RoutingTable:
 
 
 def _vocab_blob(vocab: Vocab) -> np.ndarray:
-    blob = "\n".join(vocab.id_to_word).encode("utf-8")
+    blob = "\n".join(vocab.id_to_word).encode()
     return np.frombuffer(blob, dtype=np.uint8)
 
 

@@ -66,7 +66,7 @@ class ShardSpec:
         }
 
     @classmethod
-    def from_json(cls, obj: dict) -> "ShardSpec":
+    def from_json(cls, obj: dict) -> ShardSpec:
         return cls(
             index=int(obj["index"]),
             doc_lo=int(obj["doc_lo"]),

@@ -177,7 +177,7 @@ class ClusterService:
     # Construction
     # ------------------------------------------------------------------ #
     @classmethod
-    def from_dir(cls, path: str, mmap: bool = True, **kw) -> "ClusterService":
+    def from_dir(cls, path: str, mmap: bool = True, **kw) -> ClusterService:
         """Serve a published cluster artifact (shard arrays stay mmapped)."""
         shards, routing, _ = load_cluster(path, mmap=mmap)
         return cls(shards, routing, **kw)
@@ -185,7 +185,7 @@ class ClusterService:
     @classmethod
     def from_tree(
         cls, tree: XMLTree, num_shards: int, **kw
-    ) -> "ClusterService":
+    ) -> ClusterService:
         """Partition + index + serve in-process (tests and benchmarks)."""
         shards, masks, root_kw_ids = partition_corpus(tree, num_shards)
         routing = RoutingTable(
@@ -397,7 +397,7 @@ class ClusterService:
         for w in self.workers:
             w.service.close(timeout)
 
-    def __enter__(self) -> "ClusterService":
+    def __enter__(self) -> ClusterService:
         return self
 
     def __exit__(self, *exc) -> None:

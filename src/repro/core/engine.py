@@ -65,7 +65,7 @@ class QueryStats:
         return out
 
     @classmethod
-    def merge(cls, parts: "list[QueryStats]") -> "QueryStats":
+    def merge(cls, parts: list[QueryStats]) -> QueryStats:
         """Aggregate stats across workers (cluster-level rollup).
 
         Numeric counters sum key-wise; derived ``*_rate`` gauges are ratios
@@ -116,11 +116,11 @@ class KeywordSearchEngine:
 
     # ------------------------------------------------------------------ #
     @classmethod
-    def from_xml(cls, source: str, **kw) -> "KeywordSearchEngine":
+    def from_xml(cls, source: str, **kw) -> KeywordSearchEngine:
         return cls(parse(source), **kw)
 
     @classmethod
-    def from_tree(cls, tree: XMLTree, **kw) -> "KeywordSearchEngine":
+    def from_tree(cls, tree: XMLTree, **kw) -> KeywordSearchEngine:
         return cls(tree, **kw)
 
     # ------------------------------------------------------------------ #
@@ -138,7 +138,7 @@ class KeywordSearchEngine:
         path: str,
         mmap: bool = True,
         plan_cache: PlanCache | None = None,
-    ) -> "KeywordSearchEngine":
+    ) -> KeywordSearchEngine:
         """Reload a saved artifact without re-running any index build."""
         tree, containment, dag, rcs, _ = index_io.load_parts(path, mmap=mmap)
         base = BaseIndex(tree, containment)

@@ -101,7 +101,7 @@ def save_parts(
     os.makedirs(path, exist_ok=True)
     # vocabulary words come from whitespace tokenization, so "\n" never
     # appears inside a word and a joined blob is unambiguous
-    blob = "\n".join(tree.vocab.id_to_word).encode("utf-8")
+    blob = "\n".join(tree.vocab.id_to_word).encode()
     arrays: dict[str, np.ndarray] = {
         "tree_parent": tree.parent,
         "tree_subtree_size": tree.subtree_size,

@@ -12,7 +12,8 @@ unknown keyword) yields an empty result.
 from __future__ import annotations
 
 from bisect import bisect_left, bisect_right
-from typing import TYPE_CHECKING, Callable
+from collections.abc import Callable
+from typing import TYPE_CHECKING
 
 import numpy as np
 
@@ -254,7 +255,7 @@ BASE_ALGORITHMS: dict[str, Callable[[list[IDList]], np.ndarray]] = {
 
 
 def dag_search(
-    index: "IDClusterIndex",
+    index: IDClusterIndex,
     kws: list[int],
     algorithm: str = "fwd_slca",
     collect_stats: dict | None = None,
@@ -293,7 +294,7 @@ def dag_search(
             memo[rc] = res
             return res
         parts = [res[~is_dummy]]
-        for x, p in zip(res[is_dummy], pos_c[is_dummy]):
+        for _x, p in zip(res[is_dummy], pos_c[is_dummy]):
             nested_rc = int(rcs.dummy_nested_rc[p])
             offset = int(rcs.dummy_offset[p])
             parts.append(solve(nested_rc) + offset)

@@ -177,7 +177,7 @@ def _splice(
             resolved[rc] = res
             return res
         parts = [res[~is_dummy]]
-        for x, p in zip(res[is_dummy], pos_c[is_dummy]):
+        for _x, p in zip(res[is_dummy], pos_c[is_dummy]):
             parts.append(resolve(int(rcs.dummy_nested_rc[p])) + int(rcs.dummy_offset[p]))
         out = np.concatenate(parts)
         resolved[rc] = out

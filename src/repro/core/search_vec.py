@@ -19,7 +19,7 @@ batches redundancy components along a leading axis).
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

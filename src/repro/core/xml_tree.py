@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Sequence
+from collections.abc import Sequence
 from xml.etree import ElementTree as ET
 
 import numpy as np
@@ -127,7 +127,7 @@ class NodeSpec:
 
     label: str
     text: str = ""
-    children: Sequence["NodeSpec"] = ()
+    children: Sequence[NodeSpec] = ()
 
 
 def build_tree(root: NodeSpec, vocab: Vocab | None = None) -> XMLTree:

@@ -1,7 +1,7 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+__doc__ = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 The two lines above MUST stay first (before any jax-importing import): jax
 locks the device count at first init, and only the dry-run wants 512

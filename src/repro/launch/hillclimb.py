@@ -1,7 +1,7 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Perf hillclimb driver (§Perf): re-lower the three chosen cells with one
+__doc__ = """Perf hillclimb driver (§Perf): re-lower the three chosen cells with one
 change at a time and log hypothesis -> before -> after.
 
 Cells (chosen from the baseline table):

@@ -102,7 +102,7 @@ class ModelConfig:
     def num_scan_steps(self) -> int:
         return self.n_layers // self.scan_period
 
-    def reduced(self, **overrides) -> "ModelConfig":
+    def reduced(self, **overrides) -> ModelConfig:
         """A smoke-test-sized sibling config (same family/pattern shape)."""
         scale = dict(
             n_layers=max(2, self.scan_period * 2)

@@ -269,7 +269,7 @@ def _block_cache_init(kinds, cfg: ModelConfig, batch: int, max_len: int, dtype):
 def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     stacks = []
-    for u, kinds in enumerate(cfg.scan_unit):
+    for _u, kinds in enumerate(cfg.scan_unit):
         per_step = [
             _block_cache_init(kinds, cfg, batch, max_len, dtype)
             for _ in range(cfg.num_scan_steps)

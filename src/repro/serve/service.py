@@ -163,7 +163,7 @@ class QueryService:
             self._wake.notify()
         self._thread.join(timeout)
 
-    def __enter__(self) -> "QueryService":
+    def __enter__(self) -> QueryService:
         return self
 
     def __exit__(self, *exc) -> None:

@@ -14,7 +14,7 @@ state = {"params", "opt", "step"} and is donate-able.
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

@@ -174,7 +174,7 @@ def test_pallas_query_end_to_end():
 
     tree = generate_discogs_tree(n_releases=60, seed=3)
     eng = KeywordSearchEngine(tree)
-    for q, (cat, kws) in QUERIES.items():
+    for q, (_cat, kws) in QUERIES.items():
         for sem in ("slca", "elca"):
             want = eng.query(kws, semantics=sem, index="tree", backend="scalar")
             for index in ("tree", "dag"):

@@ -17,7 +17,7 @@ def test_search_system_end_to_end():
     tree = generate_discogs_tree(n_releases=120, seed=42)
     eng = KeywordSearchEngine(tree)
     checked = 0
-    for q, (cat, kws) in QUERIES.items():
+    for q, (_cat, kws) in QUERIES.items():
         kk = eng.keyword_ids(kws)
         if any(k < 0 for k in kk):
             continue
