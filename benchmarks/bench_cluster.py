@@ -13,6 +13,12 @@ exactly that shape, through three composed mechanisms, all exact:
     so their DAG lists scale with corpus size: each shard packs and searches
     a quarter of the monolith's lists.
 
+Both worker transports drive the same published artifact: ``thread`` (PR 2's
+in-process workers — one GIL, one XLA runtime) and ``process`` (one
+subprocess per shard over the mmap'd artifact — page-cache-shared index,
+real parallelism, per-query RPC framing cost).  The CSV carries a
+``transport`` column so `run.py --json` reports are comparable across PRs.
+
 Reported per variant: achieved qps over the burst, p50/p99 latency, coalesce
 rate, and the speedup vs the single-engine baseline.  A `unique` row drives
 the same number of *distinct* queries (no repetition, so no coalescing win)
@@ -27,12 +33,13 @@ corpus must be large enough that sharding is meaningful), BENCH_CLUSTER_SHARDS
 from __future__ import annotations
 
 import os
+import tempfile
 import time
 
 import numpy as np
 
 from benchmarks.common import N_RELEASES
-from repro.cluster import ClusterService, Overloaded
+from repro.cluster import ClusterService, Overloaded, build_cluster
 from repro.core import KeywordSearchEngine
 from repro.data import QUERIES, generate_discogs_tree
 from repro.serve import QueryService
@@ -73,62 +80,83 @@ def _bench(svc, work, timed_reps: int) -> float:
     return reps[len(reps) // 2]
 
 
+def _cluster_row(art, transport, name, work, baseline, timed, rate_from=None):
+    with ClusterService.from_dir(
+        art, transport=transport, batch_window_ms=2.0,
+        max_queue_per_shard=4096,
+    ) as svc:
+        qps = _bench(svc, work, timed)
+        s = svc.stats().summary()
+        rate = (
+            s["coalesced"] / max(s["queries"], 1) if rate_from == "stats" else 0.0
+        )
+        print(
+            f"cluster{svc.num_shards}_{name},{transport},{qps:.0f},"
+            f"{s['p50_ms']},{s['p99_ms']},{rate:.2f},{qps / baseline:.2f}"
+        )
+
+
 def run() -> None:
     rng = np.random.default_rng(7)
     work = zipf_workload(rng, BURST)
     unique = [list(q) for q in dict.fromkeys(tuple(q) for q in work)]
     timed = 3 if SMOKE else 5
-    print("variant,qps,p50_ms,p99_ms,coalesce_rate,speedup_vs_mono")
+    print("variant,transport,qps,p50_ms,p99_ms,coalesce_rate,speedup_vs_mono")
 
     tree = generate_discogs_tree(n_releases=N, seed=0)
     eng = KeywordSearchEngine(tree)
     with QueryService(eng, batch_window_ms=2.0) as svc:
         mono_zipf = _bench(svc, work, timed)
         s = svc.stats().summary()
-        print(f"mono_zipf,{mono_zipf:.0f},{s['p50_ms']},{s['p99_ms']},0.00,1.00")
+        print(
+            f"mono_zipf,inproc,{mono_zipf:.0f},{s['p50_ms']},{s['p99_ms']},"
+            "0.00,1.00"
+        )
     with QueryService(eng, batch_window_ms=2.0) as svc:
         mono_uniq = _bench(svc, unique, timed)
         s = svc.stats().summary()
-        print(f"mono_unique,{mono_uniq:.0f},{s['p50_ms']},{s['p99_ms']},0.00,1.00")
-
-    with ClusterService.from_tree(
-        tree, SHARDS, batch_window_ms=2.0, max_queue_per_shard=4096
-    ) as svc:
-        clu_zipf = _bench(svc, work, timed)
-        s = svc.stats().summary()
-        rate = s["coalesced"] / max(s["queries"], 1)
         print(
-            f"cluster{svc.num_shards}_zipf,{clu_zipf:.0f},{s['p50_ms']},"
-            f"{s['p99_ms']},{rate:.2f},{clu_zipf / mono_zipf:.2f}"
-        )
-    with ClusterService.from_tree(
-        tree, SHARDS, batch_window_ms=2.0, max_queue_per_shard=4096
-    ) as svc:
-        clu_uniq = _bench(svc, unique, timed)
-        s = svc.stats().summary()
-        print(
-            f"cluster{svc.num_shards}_unique,{clu_uniq:.0f},{s['p50_ms']},"
-            f"{s['p99_ms']},0.00,{clu_uniq / mono_uniq:.2f}"
+            f"mono_unique,inproc,{mono_uniq:.0f},{s['p50_ms']},{s['p99_ms']},"
+            "0.00,1.00"
         )
 
-    # overload behaviour: a tiny per-shard queue sheds typed, never collapses
-    with ClusterService.from_tree(
-        tree, SHARDS, batch_window_ms=2.0, max_queue_per_shard=8
-    ) as svc:
-        shed = 0
-        futs = []
-        for q in unique * 4:
-            try:
-                futs.append(svc.submit(q, "slca"))
-            except Overloaded:
-                shed += 1
-        for f in futs:
-            f.result(timeout=600)
-        s = svc.stats().summary()
-        print(
-            f"# admission(max_queue=8): served={len(futs)} shed={shed} "
-            f"coalesced={s['coalesced']}"
-        )
+    with tempfile.TemporaryDirectory() as art:
+        # one publish feeds every transport row: the thread rows mmap the
+        # shard arrays in-process, the process rows mmap the same inodes
+        # from worker subprocesses — identical bytes, identical results
+        build_cluster(tree, SHARDS, art)
+        for transport in ("thread", "process"):
+            _cluster_row(
+                art, transport, "zipf", work, mono_zipf, timed,
+                rate_from="stats",
+            )
+            if transport == "process" and SMOKE:
+                # spawning a second fleet for the no-coalescing row is the
+                # one cost smoke skips; the thread row still reports it
+                print("# cluster_unique,process: skipped in smoke")
+                continue
+            _cluster_row(art, transport, "unique", unique, mono_uniq, timed)
+
+        # overload behaviour: a tiny per-shard queue sheds typed, never
+        # collapses (thread transport; admission lives in the router and is
+        # transport-independent)
+        with ClusterService.from_dir(
+            art, batch_window_ms=2.0, max_queue_per_shard=8
+        ) as svc:
+            shed = 0
+            futs = []
+            for q in unique * 4:
+                try:
+                    futs.append(svc.submit(q, "slca"))
+                except Overloaded:
+                    shed += 1
+            for f in futs:
+                f.result(timeout=600)
+            s = svc.stats().summary()
+            print(
+                f"# admission(max_queue=8): served={len(futs)} shed={shed} "
+                f"coalesced={s['coalesced']}"
+            )
 
 
 if __name__ == "__main__":

@@ -11,7 +11,10 @@ nothing — so it dominates smoke wall time.)
 
 ``--json PATH`` additionally writes every section's rows to a machine-
 readable file (CI uploads it as a workflow artifact, so perf history is
-diffable across runs).
+diffable across runs).  Sections that print a CSV header also get
+``records``: each row parsed into a dict keyed by the header columns — the
+cluster section's rows carry their ``transport`` there, so thread vs
+process trajectories stay comparable across PRs without re-parsing CSV.
 """
 import argparse
 import json
@@ -39,6 +42,25 @@ class _Tee:
 
     def flush(self) -> None:
         self.stream.flush()
+
+
+def _records(lines: list[str]) -> list[dict]:
+    """Parse a section's CSV rows into dicts (first data line = header).
+
+    Comment lines (``#``) and non-CSV chatter are skipped; ragged rows keep
+    the columns both sides agree on (zip is deliberately non-strict).
+    """
+    header: list[str] | None = None
+    records: list[dict] = []
+    for line in lines:
+        if line.startswith("#") or "," not in line:
+            continue
+        parts = [p.strip() for p in line.split(",")]
+        if header is None:
+            header = parts
+            continue
+        records.append(dict(zip(header, parts)))
+    return records
 
 
 def main(argv=None) -> int:
@@ -107,6 +129,7 @@ def main(argv=None) -> int:
             {
                 "title": title,
                 "rows": tee.lines,
+                "records": _records(tee.lines),
                 "elapsed_s": round(time.time() - t_sec, 2),
             }
         )

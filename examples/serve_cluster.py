@@ -1,11 +1,14 @@
 """Build, publish, and serve a sharded cluster over the synthetic catalog.
 
-    python examples/serve_cluster.py [n_releases] [num_shards]
+    python examples/serve_cluster.py [n_releases] [num_shards] [transport]
 
 Walks the full production path: partition the corpus into per-shard DAG
 indices, publish them as a cluster artifact (atomic manifest swap), reopen
-the artifact with memory-mapped shards, and scatter-gather queries through
-admission control — then prints the rolled-up cluster stats.
+the artifact through the chosen worker transport — ``thread`` (in-process
+engines) or ``process`` (one subprocess per shard over the mmap'd
+artifact) — scatter-gather queries through admission control, then perform
+a rolling republish against the live service and print the rolled-up
+cluster stats.
 """
 import os
 import sys
@@ -15,7 +18,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.cluster import ClusterService, build_cluster  # noqa: E402
+from repro.cluster import ClusterService, build_cluster, rolling_publish  # noqa: E402
 from repro.core import KeywordSearchEngine  # noqa: E402
 from repro.data import QUERIES, generate_discogs_tree  # noqa: E402
 
@@ -23,6 +26,7 @@ from repro.data import QUERIES, generate_discogs_tree  # noqa: E402
 def main() -> None:
     n_releases = int(sys.argv[1]) if len(sys.argv) > 1 else 200
     num_shards = int(sys.argv[2]) if len(sys.argv) > 2 else 4
+    transport = sys.argv[3] if len(sys.argv) > 3 else "thread"
 
     print(f"generating catalog: {n_releases} releases ...")
     tree = generate_discogs_tree(n_releases=n_releases, seed=0)
@@ -35,8 +39,11 @@ def main() -> None:
         )
 
         mono = KeywordSearchEngine(tree)  # equivalence witness
-        with ClusterService.from_dir(path, batch_window_ms=2.0) as svc:
-            for name, (_, kws) in QUERIES.items():
+        with ClusterService.from_dir(
+            path, transport=transport, batch_window_ms=2.0
+        ) as svc:
+            print(f"serving via {transport} workers")
+            for name, (_cat, kws) in QUERIES.items():
                 for sem in ("slca", "elca"):
                     got = svc.query(kws, semantics=sem)
                     want = mono.query(kws, semantics=sem, backend="scalar")
@@ -47,6 +54,14 @@ def main() -> None:
             futs = [svc.submit(QUERIES["Q4"][1]) for _ in range(20)]
             for f in futs:
                 f.result()
+            # rolling republish against the live service: every shard is
+            # re-indexed and hot-swapped, generations bump, zero queries drop
+            m = rolling_publish(path, tree, service=svc)
+            gens = [s["generation"] for s in m["shards"]]
+            got = svc.query(QUERIES["Q4"][1])
+            want = mono.query(QUERIES["Q4"][1], backend="scalar")
+            tag = "==" if np.array_equal(got, want) else "!!"
+            print(f"\nrolling republish: generations={gens}, post-swap {tag}")
             print("\ncluster stats:")
             for key, val in sorted(svc.stats().summary().items()):
                 print(f"  {key}: {val}")

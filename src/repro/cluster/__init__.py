@@ -3,30 +3,59 @@
     tree = generate_discogs_tree(n_releases=2000)
     build_cluster(tree, num_shards=4, path="/var/idx/cluster")
 
-    with ClusterService.from_dir("/var/idx/cluster") as svc:
+    with ClusterService.from_dir("/var/idx/cluster", transport="process") as svc:
         fut = svc.submit(["vinyl", "electronic"], semantics="slca")
         print(fut.result())
         print(svc.stats().summary())
 
 See :mod:`repro.cluster.partition` for the partitioning/exactness story,
-:mod:`repro.cluster.router` for scatter-gather semantics, and
+:mod:`repro.cluster.router` for scatter-gather semantics,
+:mod:`repro.cluster.workers` for the transport-agnostic worker layer
+(thread vs process-isolated shard workers over mmap'd artifacts), and
 :mod:`repro.cluster.admission` for overload behaviour.
 """
 from .admission import AdmissionController, Overloaded
-from .manifest import RoutingTable, build_cluster, load_cluster
+from .manifest import (
+    RoutingTable,
+    build_cluster,
+    load_cluster,
+    load_cluster_layout,
+    rolling_publish,
+)
 from .partition import ShardSpec, partition_corpus, shard_tree, split_doc_ranges
-from .router import ClusterService, ShardWorker
+from .router import ClusterService
+from .workers import (
+    ProcessPool,
+    ProcessWorker,
+    ThreadPool,
+    ThreadWorker,
+    Worker,
+    WorkerDied,
+    WorkerPool,
+)
+
+# PR 2 name for the in-process shard worker, kept for callers of the old API
+ShardWorker = ThreadWorker
 
 __all__ = [
     "AdmissionController",
     "ClusterService",
     "Overloaded",
+    "ProcessPool",
+    "ProcessWorker",
     "RoutingTable",
     "ShardSpec",
     "ShardWorker",
+    "ThreadPool",
+    "ThreadWorker",
+    "Worker",
+    "WorkerDied",
+    "WorkerPool",
     "build_cluster",
     "load_cluster",
+    "load_cluster_layout",
     "partition_corpus",
+    "rolling_publish",
     "shard_tree",
     "split_doc_ranges",
 ]

@@ -13,6 +13,14 @@ no publish ever writes into a directory the committed manifest names, a
 half-written republish is never observable: the old manifest keeps naming
 only old, untouched files, and a re-publish over a live-served cluster never
 tears it.  The previous publish is reclaimed only after the new commit.
+
+Every shard entry carries a ``generation`` stamp (0 at first publish).
+:func:`rolling_publish` republishes a cluster *shard-at-a-time*: each shard
+gets a fresh artifact dir and a committed manifest with its generation
+bumped before the next shard starts, so a crash mid-roll leaves a valid
+mixed-generation cluster, and a live :class:`~repro.cluster.router.
+ClusterService` can hot-swap each shard as it lands (``reload_shard``)
+without dropping in-flight queries.
 """
 from __future__ import annotations
 
@@ -115,7 +123,8 @@ def build_cluster(tree: XMLTree, num_shards: int, path: str) -> dict:
         "num_keywords": len(tree.vocab),
         "routing_file": routing_file,
         "shards": [
-            dict(spec.to_json(), dir=d) for spec, d in zip(specs, shard_dirs)
+            dict(spec.to_json(), dir=d, generation=0)
+            for spec, d in zip(specs, shard_dirs)
         ],
     }
     index_io.save_cluster_manifest(path, manifest)
@@ -125,13 +134,14 @@ def build_cluster(tree: XMLTree, num_shards: int, path: str) -> dict:
     return manifest
 
 
-def load_cluster(
+def load_cluster_layout(
     path: str, mmap: bool = True
-) -> tuple[list[tuple[ShardSpec, KeywordSearchEngine]], RoutingTable, dict]:
-    """Open a cluster artifact: [(spec, engine)], routing table, manifest.
+) -> tuple[dict, RoutingTable, list[tuple[ShardSpec, str]]]:
+    """Open a cluster's *layout*: manifest, routing table, (spec, dir) pairs.
 
-    Shard arrays stay memory-mapped (``mmap=True``), so N router processes
-    share one page-cache copy of every shard index.
+    No shard engine is loaded — this is what the process transport needs:
+    the router keeps the routing table, each worker subprocess mmaps its own
+    shard dir, and index pages are shared through the page cache.
     """
     manifest = index_io.load_cluster_manifest(path)
     arrs = index_io.load_arrays(
@@ -142,11 +152,90 @@ def load_cluster(
         masks=np.asarray(arrs["masks"]),
         root_kw_ids=np.asarray(arrs["root_kw_ids"]),
     )
-    shards = []
-    for obj in manifest["shards"]:
-        spec = ShardSpec.from_json(obj)
-        engine = KeywordSearchEngine.load(
-            os.path.join(path, obj["dir"]), mmap=mmap
-        )
-        shards.append((spec, engine))
+    entries = [
+        (ShardSpec.from_json(obj), os.path.join(path, obj["dir"]))
+        for obj in manifest["shards"]
+    ]
+    return manifest, routing, entries
+
+
+def load_cluster(
+    path: str, mmap: bool = True
+) -> tuple[list[tuple[ShardSpec, KeywordSearchEngine]], RoutingTable, dict]:
+    """Open a cluster artifact: [(spec, engine)], routing table, manifest.
+
+    Shard arrays stay memory-mapped (``mmap=True``), so N router processes
+    share one page-cache copy of every shard index.
+    """
+    manifest, routing, entries = load_cluster_layout(path, mmap=mmap)
+    shards = [
+        (spec, KeywordSearchEngine.load(shard_dir, mmap=mmap))
+        for spec, shard_dir in entries
+    ]
     return shards, routing, manifest
+
+
+def rolling_publish(path: str, tree: XMLTree, *, service=None) -> dict:
+    """Republish a live cluster shard-at-a-time, bumping generations.
+
+    Re-indexes ``tree`` with the cluster's *existing* partition: the new
+    tree must produce the same shard boundaries (document ranges and node
+    ranges) as the committed manifest — document *content* may change, the
+    layout may not.  Anything else is a repartition; use
+    :func:`build_cluster`.  Per shard: build + write a fresh artifact dir,
+    commit a manifest naming it with that shard's ``generation`` bumped,
+    hot-swap the serving worker via ``service.reload_shard`` when a live
+    service is given, then reclaim the old dir.  The routing arrays are
+    recomputed from the new tree and committed (and swapped into the live
+    service) with the *last* shard, so the finished publish is fully
+    self-consistent even when keywords were added or removed; mid-roll, a
+    mixed-generation cluster is served — inherent to rolling updates.  A
+    crash between commits leaves a valid cluster; live readers and retired
+    workers keep their mmaps of the old inodes.
+    """
+    manifest = index_io.load_cluster_manifest(path)
+    specs = [ShardSpec.from_json(obj) for obj in manifest["shards"]]
+    fresh = split_doc_ranges(tree, len(specs))
+    if fresh != specs:
+        raise ValueError(
+            "rolling_publish: the tree does not reproduce the cluster's "
+            f"shard layout ({[s.to_json() for s in fresh]} vs manifest "
+            f"{[s.to_json() for s in specs]}) — repartition with "
+            "build_cluster instead"
+        )
+    token = os.urandom(4).hex()
+    masks, root_kw_ids = routing_arrays(tree, specs)
+    routing_file = f"routing-{token}.npz"
+    np.savez(
+        os.path.join(path, routing_file),
+        vocab_blob=_vocab_blob(tree.vocab),
+        masks=masks,
+        root_kw_ids=root_kw_ids,
+    )
+    with open(os.path.join(path, routing_file), "rb") as f:
+        os.fsync(f.fileno())
+    for i, spec in enumerate(specs):
+        new_dir = f"shard-{token}-{spec.index:04d}"
+        engine = KeywordSearchEngine.from_tree(shard_tree(tree, spec))
+        engine.save(os.path.join(path, new_dir))
+        old_dir = manifest["shards"][i]["dir"]
+        manifest["shards"][i]["dir"] = new_dir
+        manifest["shards"][i]["generation"] = (
+            int(manifest["shards"][i].get("generation", 0)) + 1
+        )
+        last = i == len(specs) - 1
+        if last:
+            # every shard now carries the new content: name the new routing
+            # (save_cluster_manifest reclaims the old npz on this commit)
+            manifest["routing_file"] = routing_file
+            manifest["num_nodes"] = tree.num_nodes
+            manifest["num_keywords"] = len(tree.vocab)
+        index_io.save_cluster_manifest(path, manifest)
+        if service is not None:
+            service.reload_shard(i, os.path.join(path, new_dir))
+            if last:
+                service.routing = RoutingTable(
+                    vocab=tree.vocab, masks=masks, root_kw_ids=root_kw_ids
+                )
+        shutil.rmtree(os.path.join(path, old_dir), ignore_errors=True)
+    return manifest

@@ -1,9 +1,12 @@
 """ClusterService: scatter-gather keyword search over sharded DAG indices.
 
-One router fronts N shard workers.  Each worker is an ordinary
-:class:`~repro.serve.service.QueryService` (microbatching drain + PlanCache)
-over that shard's DAG index, with its own backend ("scalar" | "jax" |
-"pallas").  A query's life:
+One router fronts N shard workers behind the transport-agnostic worker
+seam (:mod:`repro.cluster.workers`): every worker speaks
+``submit/doc_stats/stats/drain/close``, whether it is a thread in this
+process (ThreadWorker) or a subprocess over the shard's mmap'd artifact
+(ProcessWorker, supervised by a ProcessPool).  The router itself owns no
+engines and no drain threads — it is routing, admission, gather, and merge
+logic.  A query's life:
 
   1. keywords resolve against the cluster routing table; the fanout is the
      AND of the per-keyword shard bitmaps — only shards whose documents
@@ -14,9 +17,17 @@ over that shard's DAG index, with its own backend ("scalar" | "jax" |
   3. admission control takes one slot on every fanout shard or sheds the
      query with a typed :class:`Overloaded` (all-or-nothing, so a saturated
      shard only sheds traffic actually routed at it);
-  4. the query is submitted to every fanout shard's service; the last shard
-     future to complete merges on its drain thread and fans the result out
-     to every coalesced caller.
+  4. the query is submitted to every fanout worker; the last shard future
+     to complete hands the gather to the merge executor, which merges and
+     fans the result out to every coalesced caller.  A worker that dies
+     mid-query fails the gather with the typed
+     :class:`~repro.cluster.workers.WorkerDied` — callers never hang.
+
+The gather captures its worker references at submit time, so
+:meth:`ClusterService.reload_shard` can hot-swap a shard's worker to a
+newly published artifact (rolling republish) without dropping in-flight
+queries: swapped-out workers are *retired* and closed only when their last
+in-flight gather finishes.
 
 Exactness (ELCA/SLCA semantics are preserved, machine-checked in
 tests/test_cluster.py): documents never span shards, and each shard tree is
@@ -40,87 +51,53 @@ results.  Only the corpus root needs cross-shard reasoning:
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import threading
 import time
-from concurrent.futures import Future, InvalidStateError
+from concurrent.futures import Future, InvalidStateError, ThreadPoolExecutor
 
 import numpy as np
 
-from repro.core.engine import KeywordSearchEngine, QueryStats
+from repro.core.engine import QueryStats
 from repro.core.xml_tree import XMLTree
-from repro.serve.service import QueryService
 
 from .admission import AdmissionController, Overloaded
-from .manifest import RoutingTable, load_cluster
-from .partition import ShardSpec, partition_corpus
+from .manifest import (
+    RoutingTable,
+    build_cluster,
+    load_cluster,
+    load_cluster_layout,
+)
+from .partition import partition_corpus
+from .workers import ProcessPool, ThreadPool, Worker, WorkerPool
 
 _EMPTY = np.zeros(0, dtype=np.int64)
 
 
-class ShardWorker:
-    """One shard: engine + drain service + document-level query stats."""
-
-    def __init__(
-        self,
-        spec: ShardSpec,
-        engine: KeywordSearchEngine,
-        *,
-        backend: str = "jax",
-        max_batch: int = 64,
-        batch_window_ms: float = 2.0,
-    ):
-        self.spec = spec
-        self.engine = engine
-        self.service = QueryService(
-            engine,
-            max_batch=max_batch,
-            batch_window_ms=batch_window_ms,
-            backend=backend,
-        )
-        # local ids of this shard's document roots (children of the replica
-        # root), ascending — the probe set for doc_stats
-        self._doc_roots = np.where(engine.tree.parent == 0)[0].astype(np.int64)
-
-    def submit(self, keywords: list[str], semantics: str) -> Future:
-        return self.service.submit(keywords, semantics)
-
-    def doc_stats(self, kw_ids: list[int]) -> tuple[np.ndarray, int]:
-        """(#docs containing each keyword, #docs containing all of them).
-
-        Pure reads of the shard's containment table (thread-safe); one
-        searchsorted of the doc-root set per keyword.
-        """
-        ct = self.engine.base.containment
-        roots = self._doc_roots
-        present = np.zeros((len(kw_ids), roots.size), dtype=bool)
-        for j, k in enumerate(kw_ids):
-            nodes, _ = ct.slice_for(k)
-            if nodes.size:
-                pos = np.minimum(
-                    np.searchsorted(nodes, roots), nodes.size - 1
-                )
-                present[j] = nodes[pos] == roots
-        return present.sum(axis=1), int(present.all(axis=0).sum())
-
-    def close(self) -> None:
-        self.service.close()
-
-
 class _Gather:
-    """Mutable scatter-gather state for one admitted (coalesced) query."""
+    """Mutable scatter-gather state for one admitted (coalesced) query.
+
+    ``workers`` pins the shard->Worker mapping as of submit time: merge and
+    the ELCA residual check always talk to the workers the query actually
+    ran on, even if a reload swapped the live pool underneath it.
+    """
 
     __slots__ = (
-        "key", "futures", "kw_ids", "semantics", "shards", "fanout_mask",
-        "all_present", "t0s", "remaining", "results", "error", "lock",
+        "key", "futures", "kw_ids", "semantics", "shards", "workers",
+        "routing", "fanout_mask", "all_present", "t0s", "remaining",
+        "results", "error", "lock",
     )
 
-    def __init__(self, key, future, kw_ids, semantics, shards, fanout_mask,
-                 all_present, t0):
+    def __init__(self, key, future, kw_ids, semantics, shards, workers,
+                 routing, fanout_mask, all_present, t0):
         self.key = key
         self.futures = [future]
         self.kw_ids = kw_ids
         self.semantics = semantics
         self.shards = shards
+        self.workers = workers  # dict[int, Worker], pinned at submit
+        self.routing = routing  # table the kw_ids/fanout were resolved on
         self.fanout_mask = fanout_mask
         self.all_present = all_present
         self.t0s = [t0]
@@ -135,41 +112,38 @@ class ClusterService:
 
     def __init__(
         self,
-        shards: list[tuple[ShardSpec, KeywordSearchEngine]],
+        pool: WorkerPool,
         routing: RoutingTable,
         *,
-        backends: str | list[str] = "jax",
-        max_batch: int = 64,
-        batch_window_ms: float = 2.0,
         max_queue_per_shard: int = 256,
     ):
-        if isinstance(backends, str):
-            backends = [backends] * len(shards)
-        if len(backends) != len(shards):
-            raise ValueError(
-                f"{len(shards)} shards but {len(backends)} backends"
-            )
         self.routing = routing
-        self.workers = [
-            ShardWorker(
-                spec,
-                engine,
-                backend=be,
-                max_batch=max_batch,
-                batch_window_ms=batch_window_ms,
-            )
-            for (spec, engine), be in zip(shards, backends)
-        ]
-        self.admission = AdmissionController(len(self.workers), max_queue_per_shard)
+        self.pool = pool
+        self.admission = AdmissionController(
+            len(pool.workers), max_queue_per_shard
+        )
         self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
         self._closed = False
+        self._close_done = False
+        self._owned_dir: str | None = None  # tempdir for from_tree(process)
         self._inflight: dict[tuple, _Gather] = {}
+        self._active = 0  # admitted gathers not yet finalized
+        self._refs: dict[Worker, int] = {}  # in-flight gathers per worker
+        self._retired: set[Worker] = set()  # swapped out, close when idle
+        # merge + ELCA residual run here, never on a worker's callback
+        # thread: a ProcessWorker's reader thread must stay free to deliver
+        # the doc_stats responses the merge is waiting on
+        self._merge_exec = ThreadPoolExecutor(
+            max_workers=2, thread_name_prefix="cluster-merge"
+        )
         self._stats = QueryStats(
             data={
                 "queries": 0,
                 "fanout_submits": 0,
                 "root_results": 0,
                 "coalesced": 0,
+                "reloads": 0,
             }
         )
 
@@ -177,25 +151,89 @@ class ClusterService:
     # Construction
     # ------------------------------------------------------------------ #
     @classmethod
-    def from_dir(cls, path: str, mmap: bool = True, **kw) -> ClusterService:
-        """Serve a published cluster artifact (shard arrays stay mmapped)."""
-        shards, routing, _ = load_cluster(path, mmap=mmap)
-        return cls(shards, routing, **kw)
+    def from_dir(
+        cls,
+        path: str,
+        transport: str = "thread",
+        mmap: bool = True,
+        *,
+        backends: str | list[str] = "jax",
+        max_batch: int = 64,
+        batch_window_ms: float = 2.0,
+        max_queue_per_shard: int = 256,
+        **pool_kw,
+    ) -> ClusterService:
+        """Serve a published cluster artifact.
+
+        ``transport="thread"`` loads every shard engine in-process (arrays
+        stay mmapped); ``transport="process"`` spawns one subprocess per
+        shard over its artifact dir — same page-cache pages, real
+        parallelism, crash isolation.
+        """
+        if transport == "thread":
+            shards, routing, _ = load_cluster(path, mmap=mmap)
+            pool: WorkerPool = ThreadPool(
+                shards,
+                backends=backends,
+                max_batch=max_batch,
+                batch_window_ms=batch_window_ms,
+                **pool_kw,
+            )
+        elif transport == "process":
+            _, routing, entries = load_cluster_layout(path, mmap=mmap)
+            pool = ProcessPool(
+                entries,
+                backends=backends,
+                max_batch=max_batch,
+                batch_window_ms=batch_window_ms,
+                **pool_kw,
+            )
+        else:
+            raise ValueError(
+                f"transport must be thread|process, got {transport!r}"
+            )
+        return cls(pool, routing, max_queue_per_shard=max_queue_per_shard)
 
     @classmethod
     def from_tree(
-        cls, tree: XMLTree, num_shards: int, **kw
+        cls,
+        tree: XMLTree,
+        num_shards: int,
+        transport: str = "thread",
+        **kw,
     ) -> ClusterService:
-        """Partition + index + serve in-process (tests and benchmarks)."""
+        """Partition + index + serve (tests and benchmarks).
+
+        The process transport needs on-disk artifacts, so it publishes the
+        cluster into a service-owned temp directory first (reclaimed at
+        close); the thread transport stays fully in memory.
+        """
+        if transport == "process":
+            workdir = tempfile.mkdtemp(prefix="cluster-proc-")
+            try:
+                build_cluster(tree, num_shards, workdir)
+                svc = cls.from_dir(workdir, transport="process", **kw)
+            except BaseException:
+                shutil.rmtree(workdir, ignore_errors=True)
+                raise
+            svc._owned_dir = workdir
+            return svc
+        max_queue = kw.pop("max_queue_per_shard", 256)
         shards, masks, root_kw_ids = partition_corpus(tree, num_shards)
         routing = RoutingTable(
             vocab=tree.vocab, masks=masks, root_kw_ids=root_kw_ids
         )
-        return cls(shards, routing, **kw)
+        return cls(
+            ThreadPool(shards, **kw), routing, max_queue_per_shard=max_queue
+        )
 
     @property
     def num_shards(self) -> int:
-        return len(self.workers)
+        return len(self.pool.workers)
+
+    @property
+    def workers(self) -> list[Worker]:
+        return self.pool.workers
 
     # ------------------------------------------------------------------ #
     # Admission + scatter
@@ -220,7 +258,11 @@ class ClusterService:
             keywords = keywords.split()
         fut: Future = Future()
         t0 = time.perf_counter()
-        kw_ids = self.routing.kw_ids(keywords)
+        # one routing snapshot per query: rolling_publish may swap
+        # self.routing mid-flight, and ids resolved on one table must never
+        # be interpreted against another
+        routing = self.routing
+        kw_ids = routing.kw_ids(keywords)
         key = (tuple(kw_ids), semantics)
         with self._lock:
             if self._closed:
@@ -236,10 +278,10 @@ class ClusterService:
             # unknown keyword: no document (and not the root) can match
             self._finish([fut], _EMPTY, [t0])
             return fut
-        fanout_mask = self.routing.fanout(kw_ids)
+        fanout_mask = routing.fanout(kw_ids)
         shards = [s for s in range(self.num_shards) if fanout_mask >> s & 1]
         all_present = all(
-            self.routing.doc_presence(k) != 0 or self.routing.at_root(k)
+            routing.doc_presence(k) != 0 or routing.at_root(k)
             for k in kw_ids
         )
         if not shards:
@@ -253,14 +295,20 @@ class ClusterService:
             self._finish([fut], res, [t0])
             return fut
         self.admission.acquire(shards)  # raises Overloaded on a full shard
-        state = _Gather(key, fut, kw_ids, semantics, shards, fanout_mask,
-                        all_present, t0)
         with self._lock:
+            # pin the workers this execution runs on; reloads swap the pool
+            # but never the gather
+            workers = {s: self.pool.workers[s] for s in shards}
+            state = _Gather(key, fut, kw_ids, semantics, shards, workers,
+                            routing, fanout_mask, all_present, t0)
             self._inflight[key] = state
+            self._active += 1
+            for w in workers.values():
+                self._refs[w] = self._refs.get(w, 0) + 1
             self._stats.data["fanout_submits"] += len(shards)
         for s in shards:
             try:
-                shard_fut = self.workers[s].submit(keywords, semantics)
+                shard_fut = workers[s].submit(keywords, semantics)
             except Exception as e:  # worker closed/dead: fail this shard
                 self._on_shard_done(state, s, None, e)
                 continue
@@ -292,7 +340,18 @@ class ClusterService:
             state.remaining -= 1
             last = state.remaining == 0
         if last:
-            self._finalize(state)
+            # hand off to the merge executor: this callback may be running
+            # on a worker's response-reader thread, which must not block on
+            # the doc_stats round-trips the ELCA merge performs
+            try:
+                self._merge_exec.submit(self._finalize, state)
+            except RuntimeError:
+                # executor already shut down (a gather outlived close()'s
+                # wait, e.g. a wedged worker killed during pool teardown):
+                # finalize inline — a stranded gather would hang its callers
+                # forever, and at this point every worker is dead or drained
+                # so the merge cannot block the reader thread indefinitely
+                self._finalize(state)
 
     def _finalize(self, state: _Gather) -> None:
         self.admission.release(state.shards)
@@ -301,15 +360,40 @@ class ClusterService:
         # a fresh execution after this pop
         with self._lock:
             self._inflight.pop(state.key, None)
+        merged = None
+        if state.error is None:
+            try:
+                merged = self._merge(state)
+            except BaseException as e:
+                # a worker exception during merge/doc_stats must fail the
+                # gather, never strand it unfinalized (callers would hang)
+                state.error = e
         if state.error is not None:
             for fut in state.futures:
                 try:
                     fut.set_exception(state.error)
                 except InvalidStateError:
                     pass
-            return
-        merged = self._merge(state)
-        self._finish(state.futures, merged, state.t0s)
+        else:
+            self._finish(state.futures, merged, state.t0s)
+        self._release_workers(state)
+
+    def _release_workers(self, state: _Gather) -> None:
+        to_close = []
+        with self._lock:
+            for w in state.workers.values():
+                n = self._refs.get(w, 0) - 1
+                if n > 0:
+                    self._refs[w] = n
+                else:
+                    self._refs.pop(w, None)
+                    if w in self._retired:
+                        self._retired.discard(w)
+                        to_close.append(w)
+            self._active -= 1
+            self._idle.notify_all()
+        for w in to_close:  # last rider gone: reclaim the swapped-out worker
+            threading.Thread(target=w.close, daemon=True).start()
 
     def _merge(self, state: _Gather) -> np.ndarray:
         parts = []
@@ -318,7 +402,7 @@ class ClusterService:
             # local id 0 is the shard's root replica: its status is a
             # statement about this shard only, recomputed globally below
             res = res[res != 0]
-            parts.append(res + self.workers[s].spec.id_offset)
+            parts.append(res + state.workers[s].spec.id_offset)
         merged = np.sort(np.concatenate(parts)) if parts else _EMPTY
         if state.semantics == "slca":
             root = merged.size == 0 and state.all_present
@@ -332,16 +416,19 @@ class ClusterService:
 
     def _root_is_elca(self, state: _Gather) -> bool:
         """Residual check: every keyword occurs outside all full documents."""
+        stat_futs = [
+            (s, state.workers[s].doc_stats(state.kw_ids)) for s in state.shards
+        ]
         docs_k = np.zeros(len(state.kw_ids), dtype=np.int64)
         full = 0
-        for s in state.shards:
-            dk, f = self.workers[s].doc_stats(state.kw_ids)
+        for _s, f in stat_futs:
+            dk, fl = f.result(timeout=60.0)
             docs_k += dk
-            full += f
+            full += fl
         for j, k in enumerate(state.kw_ids):
-            if self.routing.at_root(k):
+            if state.routing.at_root(k):
                 continue  # the root's own keyword is always residual
-            if self.routing.doc_presence(k) & ~state.fanout_mask:
+            if state.routing.doc_presence(k) & ~state.fanout_mask:
                 continue  # occurs in a shard with no full documents
             if docs_k[j] > full:
                 continue  # fanout shards have non-full documents with k
@@ -362,6 +449,38 @@ class ClusterService:
                 pass  # caller cancelled; nothing to deliver
 
     # ------------------------------------------------------------------ #
+    # Rolling republish
+    # ------------------------------------------------------------------ #
+    def reload_shard(self, i: int, path: str) -> None:
+        """Hot-swap shard ``i`` onto the artifact at ``path``.
+
+        In-flight queries finish on the worker they were submitted to (it
+        is retired and closed only once its last gather completes); every
+        query submitted after the swap runs on the new artifact.  The shard
+        must cover the same document range — this is the republish path
+        (same partition, new generation), not a repartition.
+        """
+        if not 0 <= i < self.num_shards:
+            raise IndexError(f"shard {i} out of range")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("reload_shard() on a closed ClusterService")
+        new = self.pool.spawn(i, path)
+        with self._lock:
+            if self._closed:  # raced close(): discard the fresh worker
+                closing, old = new, None
+            else:
+                old = self.pool.install(i, new)
+                self._stats.data["reloads"] += 1
+                if self._refs.get(old, 0) > 0:
+                    self._retired.add(old)  # closed by its last gather
+                    closing = None
+                else:
+                    closing = old
+        if closing is not None:
+            threading.Thread(target=closing.close, daemon=True).start()
+
+    # ------------------------------------------------------------------ #
     # Stats / lifecycle
     # ------------------------------------------------------------------ #
     def stats(self) -> QueryStats:
@@ -371,10 +490,16 @@ class ClusterService:
                 data=dict(self._stats.data),
                 latencies_ms=list(self._stats.latencies_ms),
             )
+            workers = list(self.pool.workers)
+        snap.data["transport"] = self.pool.transport
+        snap.data["worker_respawns"] = getattr(self.pool, "respawns", 0)
         snap.data.update(self.admission.snapshot())
-        # QueryStats.merge sums the shard counters and recomputes the
-        # plan hit rate from the merged hits/launches
-        agg = QueryStats.merge([w.service.stats() for w in self.workers])
+        # QueryStats.merge sums the shard counters and recomputes the plan
+        # hit rate from the merged hits/launches.  Collection fans out so a
+        # slow worker costs the max round-trip, not the sum (each process
+        # worker's stats is a blocking RPC).
+        with ThreadPoolExecutor(max_workers=max(len(workers), 1)) as ex:
+            agg = QueryStats.merge(list(ex.map(lambda w: w.stats(), workers)))
         snap.data.update(
             {
                 "shard_launches": agg.data.get("launches", 0),
@@ -391,11 +516,38 @@ class ClusterService:
         return snap
 
     def close(self, timeout: float = 30.0) -> None:
-        """Stop admitting, then drain every shard worker."""
+        """Stop admitting, drain every worker, finish gathers, shut down.
+
+        Idempotent: a second close returns immediately.  Queries admitted
+        before close complete (their workers are drained, their merges run);
+        new submits raise.
+        """
         with self._lock:
+            if self._close_done:
+                return
             self._closed = True
-        for w in self.workers:
-            w.service.close(timeout)
+        workers = list(self.pool.workers)
+        # drains fan out (each is a flush round-trip): close latency is the
+        # slowest worker's, not the sum over shards
+        with ThreadPoolExecutor(max_workers=max(len(workers), 1)) as ex:
+            list(ex.map(lambda w: w.drain(timeout), workers))
+        deadline = time.monotonic() + timeout
+        with self._idle:
+            while self._active > 0:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._idle.wait(remaining)
+            retired = list(self._retired)
+            self._retired.clear()
+        self._merge_exec.shutdown(wait=True)
+        for w in retired:
+            w.close(timeout)
+        self.pool.close(timeout)
+        if self._owned_dir is not None:
+            shutil.rmtree(self._owned_dir, ignore_errors=True)
+        with self._lock:
+            self._close_done = True
 
     def __enter__(self) -> ClusterService:
         return self

@@ -1,0 +1,26 @@
+"""Transport-agnostic shard worker layer (the cluster's execution seam).
+
+    router  ->  WorkerPool  ->  ThreadWorker | ProcessWorker  ->  engine
+                                     (in-process)  (subprocess over the
+                                                    mmap'd shard artifact)
+
+See :mod:`.base` for the Worker protocol and the architecture story,
+:mod:`.proto` for the pipe RPC framing, :mod:`.subproc` for the worker
+subprocess entrypoint, and :mod:`.pool` for supervision (crash detection,
+bounded respawn, hot-swap installs).
+"""
+from .base import Worker, WorkerDied, shard_doc_stats
+from .pool import ProcessPool, ThreadPool, WorkerPool
+from .process import ProcessWorker
+from .thread import ThreadWorker
+
+__all__ = [
+    "ProcessPool",
+    "ProcessWorker",
+    "ThreadPool",
+    "ThreadWorker",
+    "Worker",
+    "WorkerDied",
+    "WorkerPool",
+    "shard_doc_stats",
+]

@@ -1,0 +1,96 @@
+"""The worker seam: transport-agnostic per-shard execution.
+
+A :class:`Worker` answers three questions about its shard — "run this
+query" (``submit``), "how many of your documents contain these keywords"
+(``doc_stats``, the router's corpus-root ELCA residual input) and "how are
+you doing" (``stats``) — plus a two-phase shutdown (``drain`` flushes
+queued queries while keeping the worker answerable, ``close`` terminates).
+The router (:mod:`repro.cluster.router`) is pure routing/merge logic over a
+list of Workers; transports differ only in where the engine lives:
+
+  * :class:`~repro.cluster.workers.thread.ThreadWorker` — engine
+    in-process behind a QueryService drain thread (PR 2's behavior,
+    extracted out of ``router.py``);
+  * :class:`~repro.cluster.workers.process.ProcessWorker` — engine in a
+    spawned subprocess over the shard's mmap'd artifact (index pages shared
+    across workers through the page cache), speaking the
+    :mod:`~repro.cluster.workers.proto` pipe RPC with request pipelining;
+  * :class:`~repro.cluster.workers.pool.ProcessPool` — the supervisor that
+    spawns ProcessWorkers, detects crashes and respawns them (bounded).
+
+``submit`` and ``doc_stats`` both return Futures so the router can overlap
+requests across shards regardless of transport; a worker that dies fails
+its outstanding Futures with the typed :class:`WorkerDied`, which the
+gather path surfaces to every caller instead of hanging them.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.engine import QueryStats
+from repro.core.idlist import ContainmentTable
+
+from ..partition import ShardSpec
+
+
+class WorkerDied(RuntimeError):
+    """A shard worker process/thread is gone (crash, kill, failed spawn).
+
+    Raised synchronously by ``submit`` on a dead worker and set on every
+    Future that was in flight when the worker died — callers always get a
+    typed error, never a hang.
+    """
+
+    def __init__(self, shard: int, detail: str):
+        self.shard = shard
+        self.detail = detail
+        super().__init__(f"shard {shard} worker died: {detail}")
+
+
+@runtime_checkable
+class Worker(Protocol):
+    """What the router needs from one shard, whatever the transport."""
+
+    spec: ShardSpec
+
+    def submit(self, keywords: list[str], semantics: str) -> Future:
+        """Run one query; Future resolves to sorted shard-local node ids."""
+        ...
+
+    def doc_stats(self, kw_ids: list[int]) -> Future:
+        """Future of ``(docs-per-keyword counts, #docs containing all)``."""
+        ...
+
+    def stats(self) -> QueryStats:
+        """Snapshot of the worker's service counters."""
+        ...
+
+    def drain(self, timeout: float = 30.0) -> None:
+        """Flush queued queries; the worker stays answerable afterwards."""
+        ...
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Drain and terminate.  Must be idempotent."""
+        ...
+
+
+def shard_doc_stats(
+    containment: ContainmentTable, doc_roots: np.ndarray, kw_ids: list[int]
+) -> tuple[np.ndarray, int]:
+    """(#docs containing each keyword, #docs containing all of them).
+
+    Pure reads of the shard's containment table (thread-safe); one
+    searchsorted of the doc-root set per keyword.  Shared by both
+    transports — the thread worker calls it in-process, the subprocess
+    entrypoint calls it behind the RPC.
+    """
+    present = np.zeros((len(kw_ids), doc_roots.size), dtype=bool)
+    for j, k in enumerate(kw_ids):
+        nodes, _ = containment.slice_for(k)
+        if nodes.size:
+            pos = np.minimum(np.searchsorted(nodes, doc_roots), nodes.size - 1)
+            present[j] = nodes[pos] == doc_roots
+    return present.sum(axis=1).astype(np.int64), int(present.all(axis=0).sum())

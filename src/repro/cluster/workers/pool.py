@@ -1,0 +1,211 @@
+"""Worker pools: construction, supervision, and hot-swap of shard workers.
+
+A pool owns the ``workers`` list the router fans out over and knows how to
+build a *replacement* worker for one shard (``spawn`` + ``install`` — the
+primitive under ``ClusterService.reload_shard`` and crash recovery).  The
+router handles query-level lifetime (admission, worker refcounts, retiring
+swapped-out workers only when idle); the pool handles process/engine-level
+lifetime.
+
+:class:`ThreadPool` builds ThreadWorkers from in-process engines.
+:class:`ProcessPool` spawns one subprocess per shard over its artifact dir
+and supervises them: a worker that dies outside an intentional shutdown is
+respawned in place (bounded per shard, so a crash-looping artifact cannot
+fork-bomb the host) while the queries that were in flight fail fast with
+the typed ``WorkerDied``.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.core.engine import KeywordSearchEngine
+
+from ..partition import ShardSpec
+from .base import Worker, WorkerDied
+from .process import ProcessWorker
+from .thread import ThreadWorker
+
+
+class WorkerPool:
+    """Shared swap/close plumbing; subclasses implement ``spawn``."""
+
+    transport = "?"
+
+    def __init__(self) -> None:
+        self.workers: list[Worker] = []
+        self._lock = threading.Lock()
+        self._closed = False
+
+    def spawn(self, i: int, path: str | None = None) -> Worker:
+        """Build (but do not install) a replacement worker for shard ``i``,
+        loading from artifact ``path`` when given."""
+        raise NotImplementedError
+
+    def install(self, i: int, worker: Worker) -> Worker:
+        """Swap shard ``i``'s worker; returns the one swapped out."""
+        with self._lock:
+            old = self.workers[i]
+            self.workers[i] = worker
+        return old
+
+    def close(self, timeout: float = 30.0) -> None:
+        with self._lock:
+            self._closed = True
+        for w in self.workers:
+            w.close(timeout)
+
+
+class ThreadPool(WorkerPool):
+    """In-process engines behind QueryService drain threads (PR 2)."""
+
+    transport = "thread"
+
+    def __init__(
+        self,
+        shards: list[tuple[ShardSpec, KeywordSearchEngine]],
+        *,
+        backends: str | list[str] = "jax",
+        max_batch: int = 64,
+        batch_window_ms: float = 2.0,
+    ):
+        super().__init__()
+        backends = _per_shard(backends, len(shards))
+        self._backends = backends
+        self._max_batch = max_batch
+        self._batch_window_ms = batch_window_ms
+        self.workers = [
+            ThreadWorker(
+                spec,
+                engine,
+                backend=be,
+                max_batch=max_batch,
+                batch_window_ms=batch_window_ms,
+            )
+            for (spec, engine), be in zip(shards, backends)
+        ]
+
+    def spawn(self, i: int, path: str | None = None) -> ThreadWorker:
+        if path is None:
+            raise ValueError("thread transport reloads need an artifact path")
+        old = self.workers[i]
+        engine = KeywordSearchEngine.load(path, mmap=True)
+        return ThreadWorker(
+            old.spec,
+            engine,
+            backend=self._backends[i],
+            max_batch=self._max_batch,
+            batch_window_ms=self._batch_window_ms,
+        )
+
+
+class ProcessPool(WorkerPool):
+    """Per-shard subprocesses over mmap'd artifact dirs, supervised."""
+
+    transport = "process"
+
+    def __init__(
+        self,
+        shards: list[tuple[ShardSpec, str]],  # (spec, artifact dir)
+        *,
+        backends: str | list[str] = "jax",
+        max_batch: int = 64,
+        batch_window_ms: float = 2.0,
+        max_respawns: int = 3,
+        spawn_timeout: float = 300.0,
+    ):
+        super().__init__()
+        backends = _per_shard(backends, len(shards))
+        self._backends = backends
+        self._max_batch = max_batch
+        self._batch_window_ms = batch_window_ms
+        self._max_respawns = int(max_respawns)
+        self._respawns_left = [self._max_respawns] * len(shards)
+        self._spawn_timeout = float(spawn_timeout)
+        self.respawns = 0  # total, for the stats rollup
+        # spawn everything first (children load their artifacts in
+        # parallel), then wait for readiness
+        self.workers = [
+            self._spawn_worker(spec, d, be)
+            for (spec, d), be in zip(shards, backends)
+        ]
+        for w in self.workers:
+            if not w.wait_ready(spawn_timeout):
+                err = w._dead or WorkerDied(
+                    w.spec.index, f"not ready after {spawn_timeout}s"
+                )
+                self.close(timeout=5.0)
+                raise err
+
+    def _spawn_worker(
+        self, spec: ShardSpec, shard_dir: str, backend: str
+    ) -> ProcessWorker:
+        return ProcessWorker(
+            spec,
+            shard_dir,
+            backend=backend,
+            max_batch=self._max_batch,
+            batch_window_ms=self._batch_window_ms,
+            on_death=self._on_death,
+        )
+
+    def spawn(self, i: int, path: str | None = None) -> ProcessWorker:
+        """Replacement worker for shard ``i`` — *verified* loadable.
+
+        Blocks until the child reports ready (symmetric with
+        ThreadPool.spawn, which loads the engine synchronously) so a bad
+        artifact path raises :class:`WorkerDied` at the reload call site
+        instead of silently burning the shard's respawn budget."""
+        cur = self.workers[i]
+        worker = self._spawn_worker(
+            cur.spec, path or cur.shard_dir, self._backends[i]
+        )
+        if not worker.wait_ready(self._spawn_timeout):
+            err = worker._dead or WorkerDied(
+                cur.spec.index, f"not ready after {self._spawn_timeout}s"
+            )
+            worker.close(timeout=5.0)
+            raise err
+        return worker
+
+    def install(self, i: int, worker: Worker) -> Worker:
+        old = super().install(i, worker)
+        with self._lock:
+            # a fresh artifact gets a fresh crash budget
+            self._respawns_left[i] = self._max_respawns
+        return old
+
+    def _on_death(self, worker: ProcessWorker) -> None:
+        """Reader-thread callback on unexpected death: bounded respawn.
+
+        The dead worker's in-flight Futures were already failed with
+        ``WorkerDied`` (fail-fast, the callers retry or surface the error);
+        respawning here restores capacity for everything that follows.
+        """
+        i = worker.spec.index
+        with self._lock:
+            if (
+                self._closed
+                or self.workers[i] is not worker  # raced a reload: obsolete
+                or self._respawns_left[i] <= 0
+            ):
+                return
+            self._respawns_left[i] -= 1
+            self.respawns += 1
+        replacement = self._spawn_worker(
+            worker.spec, worker.shard_dir, self._backends[i]
+        )
+        with self._lock:
+            if self._closed or self.workers[i] is not worker:
+                threading.Thread(
+                    target=replacement.close, args=(5.0,), daemon=True
+                ).start()
+                return
+            self.workers[i] = replacement
+
+
+def _per_shard(backends: str | list[str], n: int) -> list[str]:
+    if isinstance(backends, str):
+        return [backends] * n
+    if len(backends) != n:
+        raise ValueError(f"{n} shards but {len(backends)} backends")
+    return list(backends)

@@ -1,0 +1,83 @@
+"""Length-prefixed frame protocol for the process-worker pipe RPC.
+
+One frame is::
+
+    uint32_be header_len | header_json[header_len] | payload
+
+``payload`` length comes from ``header["payload_len"]`` (0 when absent).
+Array payloads are raw ``.npy`` bytes (``np.lib.format``), so result
+vectors cross the pipe without pickling and parse straight back into
+numpy — the npy header carries dtype/shape, the JSON header carries
+everything else (request id, op, error info, scalar extras).
+
+Both sides write whole frames under a lock and flush, so frames never
+interleave; reads are blocking and a short read (EOF) returns ``(None,
+b"")`` — the peer is gone.
+"""
+from __future__ import annotations
+
+import io
+import json
+import struct
+from typing import BinaryIO
+
+import numpy as np
+
+_LEN = struct.Struct(">I")
+
+
+def _json_default(obj):
+    # numpy scalars (counter rollups, doc counts) serialize as their value
+    if hasattr(obj, "item"):
+        return obj.item()
+    raise TypeError(f"not JSON serializable: {type(obj).__name__}")
+
+
+def write_frame(stream: BinaryIO, header: dict, payload: bytes = b"") -> None:
+    header = dict(header)
+    if payload:
+        header["payload_len"] = len(payload)
+    data = json.dumps(header, separators=(",", ":"), default=_json_default)
+    raw = data.encode()
+    stream.write(_LEN.pack(len(raw)) + raw + payload)
+    stream.flush()
+
+
+def _read_exact(stream: BinaryIO, n: int) -> bytes | None:
+    buf = b""
+    while len(buf) < n:
+        chunk = stream.read(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+def read_frame(stream: BinaryIO) -> tuple[dict | None, bytes]:
+    """Read one frame; ``(None, b"")`` means the stream ended (peer gone)."""
+    head = _read_exact(stream, _LEN.size)
+    if head is None:
+        return None, b""
+    raw = _read_exact(stream, _LEN.unpack(head)[0])
+    if raw is None:
+        return None, b""
+    header = json.loads(raw)
+    n = int(header.get("payload_len", 0))
+    payload = b""
+    if n:
+        payload = _read_exact(stream, n)
+        if payload is None:
+            return None, b""
+    return header, payload
+
+
+def dump_array(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.lib.format.write_array(
+        buf, np.ascontiguousarray(arr), allow_pickle=False
+    )
+    return buf.getvalue()
+
+
+def load_array(payload: bytes) -> np.ndarray:
+    return np.lib.format.read_array(io.BytesIO(payload), allow_pickle=False)

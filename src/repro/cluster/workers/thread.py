@@ -1,0 +1,69 @@
+"""ThreadWorker: the shard engine lives in-process (PR 2's transport).
+
+One :class:`~repro.serve.service.QueryService` drain thread per shard,
+exactly what ``router.py`` used to build inline — extracted here so the
+router sees only the :class:`~repro.cluster.workers.base.Worker` seam.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+
+from repro.core.engine import KeywordSearchEngine, QueryStats
+from repro.serve.service import QueryService
+
+from ..partition import ShardSpec, doc_roots
+from .base import shard_doc_stats
+
+
+class ThreadWorker:
+    """One shard: engine + drain service + document-level query stats."""
+
+    transport = "thread"
+
+    def __init__(
+        self,
+        spec: ShardSpec,
+        engine: KeywordSearchEngine,
+        *,
+        backend: str = "jax",
+        max_batch: int = 64,
+        batch_window_ms: float = 2.0,
+    ):
+        self.spec = spec
+        self.engine = engine
+        self.service = QueryService(
+            engine,
+            max_batch=max_batch,
+            batch_window_ms=batch_window_ms,
+            backend=backend,
+        )
+        # local ids of this shard's document roots (children of the replica
+        # root), ascending — the probe set for doc_stats
+        self._doc_roots = doc_roots(engine.tree)
+
+    def submit(self, keywords: list[str], semantics: str) -> Future:
+        return self.service.submit(keywords, semantics)
+
+    def doc_stats(self, kw_ids: list[int]) -> Future:
+        fut: Future = Future()
+        try:
+            fut.set_result(
+                shard_doc_stats(
+                    self.engine.base.containment, self._doc_roots, kw_ids
+                )
+            )
+        except Exception as e:
+            fut.set_exception(e)
+        return fut
+
+    def stats(self) -> QueryStats:
+        return self.service.stats()
+
+    def drain(self, timeout: float = 30.0) -> None:
+        # QueryService.close drains the queue and stops the thread; the
+        # engine stays readable, so doc_stats/stats keep working — exactly
+        # the "drained but answerable" phase the router's shutdown needs
+        self.service.close(timeout)
+
+    def close(self, timeout: float = 30.0) -> None:
+        self.service.close(timeout)

@@ -38,7 +38,10 @@ from .xml_tree import Vocab, XMLTree
 FORMAT_VERSION = 1
 _MANIFEST = "manifest.json"
 
-CLUSTER_FORMAT_VERSION = 1
+# v2 (PR 3): every entry in ``shards`` carries a ``generation`` stamp,
+# bumped per-shard by the rolling republish path — readers of v1 manifests
+# would silently miss the stamp, so the version gates it out loud
+CLUSTER_FORMAT_VERSION = 2
 _CLUSTER_MANIFEST = "cluster.json"
 
 

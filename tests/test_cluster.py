@@ -15,6 +15,7 @@ from repro.cluster import (
     Overloaded,
     build_cluster,
     partition_corpus,
+    rolling_publish,
     shard_tree,
     split_doc_ranges,
 )
@@ -119,17 +120,28 @@ def test_partition_covers_every_node(corpus):
 # --------------------------------------------------------------------------- #
 
 
+@pytest.mark.parametrize("transport", ["thread", "process"])
 @pytest.mark.parametrize("backend", ["scalar", "jax", "pallas"])
 @pytest.mark.parametrize("num_shards", [1, 2, 4])
-def test_cluster_matches_monolith(corpus, expected, num_shards, backend):
-    """The acceptance matrix: shard counts x backends x semantics.
+def test_cluster_matches_monolith(corpus, expected, num_shards, backend,
+                                  transport):
+    """The acceptance matrix: shard counts x backends x semantics x transport.
 
     The jax drain covers the full query set; the scalar and (interpret-mode)
-    pallas drains cover a representative subset to bound suite runtime."""
+    pallas drains cover a representative subset to bound suite runtime.  The
+    process transport runs the same full query set through per-shard
+    subprocesses over a published artifact — results must be byte-identical
+    to the thread transport and the monolith."""
+    if transport == "process" and backend != "jax":
+        pytest.skip(
+            "process-transport equivalence runs on the default jax drain; "
+            "the scalar/pallas drains are covered by the thread rows"
+        )
     queries = ALL_QUERIES if backend == "jax" else ALL_QUERIES[:4] + ALL_QUERIES[9:]
     idx = [ALL_QUERIES.index(q) for q in queries]
     with ClusterService.from_tree(
-        corpus, num_shards, backends=backend, batch_window_ms=1.0
+        corpus, num_shards, transport=transport,
+        backends=backend, batch_window_ms=1.0,
     ) as svc:
         assert svc.num_shards == num_shards
         for sem in ("slca", "elca"):
@@ -138,7 +150,10 @@ def test_cluster_matches_monolith(corpus, expected, num_shards, backend):
                 assert res.dtype == np.int64
                 np.testing.assert_array_equal(
                     res, expected[(i, sem)],
-                    err_msg=f"shards={num_shards} {backend} {sem} {ALL_QUERIES[i]}",
+                    err_msg=(
+                        f"shards={num_shards} {backend} {transport} "
+                        f"{sem} {ALL_QUERIES[i]}"
+                    ),
                 )
 
 
@@ -379,3 +394,248 @@ def test_cluster_crashed_republish_is_invisible(tmp_path, corpus, expected,
             np.testing.assert_array_equal(
                 svc.query(ALL_QUERIES[i], "slca"), expected[(i, "slca")]
             )
+
+
+# --------------------------------------------------------------------------- #
+# Admission under concurrent overload
+# --------------------------------------------------------------------------- #
+
+
+def test_admission_concurrent_overload(corpus):
+    """N threads hammer submit() past the queue bounds: every call either
+    returns a Future or raises the typed Overloaded, no future is ever lost,
+    and the shed/depth counters reconcile exactly with what callers saw."""
+    import threading
+
+    # distinct (keywords, semantics) pairs so nothing coalesces: every
+    # admitted query takes real slots
+    distinct = [[f"img-{i}.jpg"] for i in range(N_RELEASES)]
+    distinct += [kws for _, kws in QUERIES.values()]
+    work = [(q, sem) for q in distinct for sem in ("slca", "elca")]
+
+    svc = ClusterService.from_tree(
+        corpus, 2, max_queue_per_shard=4,
+        max_batch=64, batch_window_ms=60_000.0,  # park the drain: queues fill
+    )
+    futures, sheds, lock = [], [], threading.Lock()
+
+    def hammer(chunk):
+        got_f, got_s = [], 0
+        for q, sem in chunk:
+            try:
+                got_f.append(svc.submit(q, sem))
+            except Overloaded as e:
+                assert 0 <= e.shard < 2 and e.limit == 4
+                got_s += 1
+        with lock:
+            futures.extend(got_f)
+            sheds.append(got_s)
+
+    n_threads = 8
+    chunks = [work[i::n_threads] for i in range(n_threads)]
+    threads = [threading.Thread(target=hammer, args=(c,)) for c in chunks]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    snap = svc.stats().summary()
+    assert snap["queries"] == len(work)
+    assert snap["shed"] == sum(sheds)
+    assert snap["coalesced"] == 0  # all pairs distinct
+    assert snap["admitted"] == len(futures)
+    assert len(futures) + sum(sheds) == len(work)
+    # the parked drain held every admitted slot, so at least one shard had
+    # to fill up for any shedding to have happened at all
+    assert sum(sheds) > 0 and snap["queue_depth_max"] == 4
+
+    svc.close()  # drains the parked windows; every admitted future lands
+    for fut in futures:
+        assert fut.result(timeout=120) is not None  # no lost futures
+    snap = svc.stats().summary()
+    assert snap["queue_depth_per_shard"] == [0, 0]
+
+
+def test_cluster_close_idempotent(corpus):
+    svc = ClusterService.from_tree(corpus, 2, batch_window_ms=1.0)
+    svc.query(ALL_QUERIES[0], "slca")
+    svc.close()
+    svc.close()  # second close is a no-op, not an error
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(ALL_QUERIES[0])
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.reload_shard(0, "/nonexistent")
+
+
+def test_doc_stats_failure_finalizes_gather(corpus, expected):
+    """Regression: a worker exception during the ELCA doc_stats round must
+    fail the gather's futures, not strand them unfinalized (callers hung and
+    the admission slots leaked)."""
+    with ClusterService.from_tree(corpus, 2, batch_window_ms=1.0) as svc:
+        orig = svc.pool.workers[0].doc_stats
+
+        def boom(kw_ids):
+            raise RuntimeError("doc_stats boom")
+
+        svc.pool.workers[0].doc_stats = boom
+        try:
+            # ["release"] is in every document => fans out everywhere, is
+            # all-present, and the ELCA merge must consult doc_stats
+            fut = svc.submit(["release"], "elca")
+            with pytest.raises(RuntimeError, match="doc_stats boom"):
+                fut.result(timeout=60)
+        finally:
+            svc.pool.workers[0].doc_stats = orig
+        # the gather released its slots and un-published itself: the same
+        # query immediately succeeds afresh
+        i = ALL_QUERIES.index(["release"])
+        np.testing.assert_array_equal(
+            svc.query(["release"], "elca"), expected[(i, "elca")]
+        )
+        snap = svc.stats().summary()
+        assert snap["queue_depth_per_shard"] == [0, 0]
+
+
+# --------------------------------------------------------------------------- #
+# Rolling republish + hot shard reload
+# --------------------------------------------------------------------------- #
+
+
+def test_reload_shard_under_traffic(tmp_path, corpus, expected):
+    """reload_shard swaps a worker under concurrent traffic with zero failed
+    queries; the swapped-out worker is retired and closed once idle."""
+    import threading
+    import time
+
+    queries = [kws for _, kws in QUERIES.values()]
+    idx = [ALL_QUERIES.index(q) for q in queries]
+    with ClusterService.from_tree(corpus, 2, batch_window_ms=1.0) as svc:
+        old = svc.pool.workers[0]
+        new_dir = str(tmp_path / "shard0-regen")
+        old.engine.save(new_dir)  # a republished artifact, same doc range
+
+        stop = threading.Event()
+        errors: list = []
+
+        def hammer():
+            n = 0
+            while not stop.is_set():
+                q = queries[n % len(queries)]
+                want = expected[(idx[n % len(queries)], "slca")]
+                try:
+                    got = svc.query(q, "slca")
+                    if not np.array_equal(got, want):
+                        errors.append(("mismatch", q))
+                except Exception as e:  # noqa: BLE001 - recorded for assert
+                    errors.append(("raised", q, repr(e)))
+                n += 1
+
+        threads = [threading.Thread(target=hammer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for _ in range(3):  # several swaps while traffic flows
+            svc.reload_shard(0, new_dir)
+            time.sleep(0.05)
+        stop.set()
+        for t in threads:
+            t.join()
+
+        assert errors == []
+        assert svc.pool.workers[0] is not old
+        assert svc.stats().summary()["reloads"] == 3
+        # the first swapped-out worker drains its riders and is closed
+        deadline = time.time() + 30
+        while not old.service._closed and time.time() < deadline:
+            time.sleep(0.05)
+        assert old.service._closed
+        # the new worker serves identically
+        for q in queries[:3]:
+            np.testing.assert_array_equal(
+                svc.query(q, "slca"),
+                expected[(ALL_QUERIES.index(q), "slca")],
+            )
+
+
+def test_rolling_publish_generations(tmp_path, corpus, expected):
+    """rolling_publish republishes shard-at-a-time: generations bump, old
+    dirs are reclaimed, a live service hot-swaps with zero failed queries,
+    and a fresh load serves the new publish."""
+    import os
+
+    path = str(tmp_path / "cluster")
+    m0 = build_cluster(corpus, 2, path)
+    assert [s["generation"] for s in m0["shards"]] == [0, 0]
+    old_dirs = [s["dir"] for s in m0["shards"]]
+
+    with ClusterService.from_dir(path, batch_window_ms=1.0) as svc:
+        before = svc.query(ALL_QUERIES[0], "slca")
+        m1 = rolling_publish(path, corpus, service=svc)
+        assert [s["generation"] for s in m1["shards"]] == [1, 1]
+        assert svc.stats().summary()["reloads"] == 2
+        after = svc.query(ALL_QUERIES[0], "slca")
+        np.testing.assert_array_equal(before, after)
+    for d in old_dirs:
+        assert not os.path.exists(os.path.join(path, d)), d
+    with ClusterService.from_dir(path) as svc2:
+        for i in (0, 3):
+            np.testing.assert_array_equal(
+                svc2.query(ALL_QUERIES[i], "slca"), expected[(i, "slca")]
+            )
+
+
+def test_rolling_publish_rejects_repartition(tmp_path, corpus):
+    from repro.core import NodeSpec as NS
+    from repro.core import build_tree as bt
+
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    other = bt(NS("root", children=[NS("d", "a"), NS("d", "b"), NS("d", "c")]))
+    with pytest.raises(ValueError, match="repartition"):
+        rolling_publish(path, other)
+
+
+def test_rolling_publish_content_change_updates_routing(tmp_path):
+    """Republishing a tree whose *content* changed (same layout) must
+    refresh the routing arrays — on disk and in the live service — or new
+    keywords route nowhere and stale ones corrupt the root fixup."""
+    def make(words):
+        return build_tree(
+            NodeSpec("root", children=[NodeSpec("d", w) for w in words])
+        )
+
+    v1 = make(["alpha", "beta", "alpha", "beta"])
+    v2 = make(["alpha", "beta", "gamma", "beta"])  # doc 2 re-tagged
+    path = str(tmp_path / "cluster")
+    build_cluster(v1, 2, path)
+    mono2 = KeywordSearchEngine(v2)
+
+    with ClusterService.from_dir(path, batch_window_ms=0.5) as svc:
+        assert svc.query(["gamma"], "slca").size == 0  # unknown in v1
+        rolling_publish(path, v2, service=svc)
+        for q in (["gamma"], ["alpha"], ["alpha", "beta"], ["gamma", "beta"]):
+            for sem in ("slca", "elca"):
+                np.testing.assert_array_equal(
+                    svc.query(q, sem),
+                    mono2.query(q, semantics=sem, backend="scalar"),
+                    err_msg=f"live {q} {sem}",
+                )
+    with ClusterService.from_dir(path, batch_window_ms=0.5) as svc2:
+        for q in (["gamma"], ["alpha", "beta"]):
+            np.testing.assert_array_equal(
+                svc2.query(q, "slca"),
+                mono2.query(q, backend="scalar"),
+                err_msg=f"fresh {q}",
+            )
+
+
+def test_reload_shard_bad_artifact_raises_and_keeps_serving(corpus, expected):
+    """A reload onto an unloadable artifact must raise at the call site
+    (either transport) and leave the old worker serving."""
+    with ClusterService.from_tree(corpus, 2, batch_window_ms=1.0) as svc:
+        with pytest.raises(OSError):
+            svc.reload_shard(0, "/nonexistent/artifact")
+        assert svc.stats().summary()["reloads"] == 0
+        np.testing.assert_array_equal(
+            svc.query(ALL_QUERIES[0], "slca"), expected[(0, "slca")]
+        )

@@ -1,0 +1,200 @@
+"""Worker-layer unit tests: pipe RPC framing, the ProcessWorker lifecycle
+(ready → serve → drain → close), typed WorkerDied on kill (no hangs), and
+pool supervision (bounded respawn through the router's gather path).
+
+Transport *equivalence* on full query matrices lives in test_cluster.py;
+this file exercises the seam itself.
+"""
+import io
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterService, WorkerDied
+from repro.cluster.partition import split_doc_ranges
+from repro.cluster.workers import ProcessWorker, ThreadWorker, shard_doc_stats
+from repro.cluster.workers.proto import (
+    dump_array,
+    load_array,
+    read_frame,
+    write_frame,
+)
+from repro.core import KeywordSearchEngine
+from repro.data import QUERIES, generate_discogs_tree
+
+N_RELEASES = 12
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_discogs_tree(n_releases=N_RELEASES, seed=11)
+
+
+@pytest.fixture(scope="module")
+def engine(corpus):
+    return KeywordSearchEngine(corpus)
+
+
+@pytest.fixture(scope="module")
+def artifact(engine, tmp_path_factory):
+    """A single-shard artifact (the whole corpus as shard 0)."""
+    path = str(tmp_path_factory.mktemp("worker") / "shard")
+    engine.save(path)
+    return path
+
+
+@pytest.fixture(scope="module")
+def spec(corpus):
+    return split_doc_ranges(corpus, 1)[0]
+
+
+# --------------------------------------------------------------------------- #
+# Frame protocol
+# --------------------------------------------------------------------------- #
+
+
+def test_proto_frame_roundtrip():
+    buf = io.BytesIO()
+    arr = np.arange(17, dtype=np.int64)
+    write_frame(buf, {"id": 3, "op": "submit", "ok": True}, dump_array(arr))
+    write_frame(buf, {"id": 4, "op": "drain", "ok": True})
+    buf.seek(0)
+    h1, p1 = read_frame(buf)
+    assert h1["id"] == 3 and h1["payload_len"] == len(p1)
+    np.testing.assert_array_equal(load_array(p1), arr)
+    h2, p2 = read_frame(buf)
+    assert h2 == {"id": 4, "op": "drain", "ok": True} and p2 == b""
+    h3, _ = read_frame(buf)  # EOF is a (None, b"") result, not an exception
+    assert h3 is None
+
+
+def test_proto_truncated_frame_is_eof():
+    buf = io.BytesIO()
+    write_frame(buf, {"id": 1, "op": "x"}, b"12345678")
+    raw = buf.getvalue()
+    for cut in (2, len(raw) - 3):
+        h, _ = read_frame(io.BytesIO(raw[:cut]))
+        assert h is None
+
+
+def test_proto_numpy_scalars_in_header():
+    buf = io.BytesIO()
+    write_frame(buf, {"id": 0, "full": np.int64(7), "rate": np.float32(0.5)})
+    buf.seek(0)
+    h, _ = read_frame(buf)
+    assert h["full"] == 7 and abs(h["rate"] - 0.5) < 1e-6
+
+
+# --------------------------------------------------------------------------- #
+# ProcessWorker lifecycle
+# --------------------------------------------------------------------------- #
+
+
+def test_process_worker_serves_and_matches_thread(corpus, engine, artifact, spec):
+    tw = ThreadWorker(spec, engine, batch_window_ms=1.0)
+    pw = ProcessWorker(spec, artifact, batch_window_ms=1.0)
+    try:
+        assert pw.wait_ready(300.0) and pw.pid is not None
+        for _name, kws in list(QUERIES.values())[:4]:
+            for sem in ("slca", "elca"):
+                a = tw.submit(kws, sem).result(timeout=120)
+                b = pw.submit(kws, sem).result(timeout=120)
+                np.testing.assert_array_equal(a, b, err_msg=f"{kws} {sem}")
+        kw_ids = [corpus.vocab.get(w) for w in QUERIES["Q4"][1]]
+        dk_t, full_t = tw.doc_stats(kw_ids).result(timeout=30)
+        dk_p, full_p = pw.doc_stats(kw_ids).result(timeout=30)
+        np.testing.assert_array_equal(dk_t, dk_p)
+        assert full_t == full_p
+        snap = pw.stats()
+        assert snap.data["queries"] == 8 and snap.latencies_ms
+        # drain: queued work flushes, the worker stays answerable...
+        pw.drain()
+        np.testing.assert_array_equal(dk_p, pw.doc_stats(kw_ids).result(30)[0])
+        # ...but new submits are rejected by the remote (closed service)
+        with pytest.raises(RuntimeError, match="closed"):
+            pw.submit(QUERIES["Q1"][1], "slca").result(timeout=30)
+    finally:
+        tw.close()
+        pw.close()
+        pw.close()  # idempotent
+    assert pw._proc.poll() is not None  # the subprocess actually exited
+
+
+def test_process_worker_kill_fails_fast_typed(corpus, artifact, spec):
+    # a huge batch window parks the submitted query inside the subprocess,
+    # so the kill reliably lands mid-query
+    pw = ProcessWorker(spec, artifact, batch_window_ms=60_000.0)
+    try:
+        assert pw.wait_ready(300.0)
+        fut = pw.submit(QUERIES["Q1"][1], "slca")
+        pw._proc.kill()
+        with pytest.raises(WorkerDied) as exc_info:
+            fut.result(timeout=60)  # typed failure, no hang
+        assert exc_info.value.shard == spec.index
+        # death is sticky: later submits raise synchronously
+        deadline = time.time() + 30
+        while pw._dead is None and time.time() < deadline:
+            time.sleep(0.05)
+        with pytest.raises(WorkerDied):
+            pw.submit(QUERIES["Q1"][1], "slca")
+    finally:
+        pw.close()
+
+
+def test_pool_respawns_killed_worker(corpus, engine):
+    """Through the router: kill mid-query => typed WorkerDied surfaces on the
+    caller's future, the supervisor respawns the shard (bounded), and the
+    next query runs on the replacement."""
+    kws = QUERIES["Q1"][1]
+    want = engine.query(kws, backend="scalar")
+    with ClusterService.from_tree(
+        corpus, 1, transport="process", batch_window_ms=2_000.0
+    ) as svc:
+        first = svc.pool.workers[0]
+        fut = svc.submit(kws, "slca")
+        first._proc.kill()
+        with pytest.raises(WorkerDied):
+            fut.result(timeout=120)
+        deadline = time.time() + 300
+        while svc.pool.workers[0] is first and time.time() < deadline:
+            time.sleep(0.1)
+        assert svc.pool.workers[0] is not first, "pool did not respawn"
+        np.testing.assert_array_equal(svc.query(kws, "slca"), want)
+        snap = svc.stats().summary()
+        assert snap["worker_respawns"] == 1
+        assert snap["queue_depth_per_shard"] == [0]
+
+
+# --------------------------------------------------------------------------- #
+# shard_doc_stats helper
+# --------------------------------------------------------------------------- #
+
+
+def test_shard_doc_stats_counts(corpus, engine):
+    doc_roots = np.where(corpus.parent == 0)[0].astype(np.int64)
+    vinyl = corpus.vocab.get("vinyl")
+    release = corpus.vocab.get("release")
+    docs_k, full = shard_doc_stats(
+        engine.base.containment, doc_roots, [release]
+    )
+    assert docs_k[0] == N_RELEASES and full == N_RELEASES  # in every doc
+    docs_k, full = shard_doc_stats(
+        engine.base.containment, doc_roots, [release, vinyl]
+    )
+    assert docs_k[0] == N_RELEASES and full == docs_k[1]  # ANDing with vinyl
+
+
+def test_process_reload_bad_artifact_raises_workerdied(corpus):
+    """ProcessPool.spawn verifies the replacement child actually loads its
+    artifact: a bad path raises typed WorkerDied at the reload call site
+    (symmetric with the thread transport) and the shard keeps serving."""
+    kws = QUERIES["Q1"][1]
+    with ClusterService.from_tree(
+        corpus, 1, transport="process", batch_window_ms=1.0
+    ) as svc:
+        before = svc.query(kws, "slca")
+        with pytest.raises(WorkerDied):
+            svc.reload_shard(0, "/nonexistent/artifact")
+        assert svc.stats().summary()["reloads"] == 0
+        np.testing.assert_array_equal(svc.query(kws, "slca"), before)
