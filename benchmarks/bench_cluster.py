@@ -13,11 +13,14 @@ exactly that shape, through three composed mechanisms, all exact:
     so their DAG lists scale with corpus size: each shard packs and searches
     a quarter of the monolith's lists.
 
-Both worker transports drive the same published artifact: ``thread`` (PR 2's
-in-process workers — one GIL, one XLA runtime) and ``process`` (one
+All three worker transports drive the same published artifact: ``thread``
+(PR 2's in-process workers — one GIL, one XLA runtime), ``process`` (one
 subprocess per shard over the mmap'd artifact — page-cache-shared index,
-real parallelism, per-query RPC framing cost).  The CSV carries a
-``transport`` column so `run.py --json` reports are comparable across PRs.
+real parallelism, per-query RPC framing cost), and ``remote`` (standalone
+shard servers on localhost sockets — the process row's framing plus a TCP
+hop, the honest floor for what multi-host sharding costs before the
+network itself).  The CSV carries a ``transport`` column so `run.py
+--json` reports are comparable across PRs.
 
 Reported per variant: achieved qps over the burst, p50/p99 latency, coalesce
 rate, and the speedup vs the single-engine baseline.  A `unique` row drives
@@ -40,6 +43,7 @@ import numpy as np
 
 from benchmarks.common import N_RELEASES
 from repro.cluster import ClusterService, Overloaded, build_cluster
+from repro.cluster.workers.server import launch_cluster_servers
 from repro.core import KeywordSearchEngine
 from repro.data import QUERIES, generate_discogs_tree
 from repro.serve import QueryService
@@ -80,10 +84,11 @@ def _bench(svc, work, timed_reps: int) -> float:
     return reps[len(reps) // 2]
 
 
-def _cluster_row(art, transport, name, work, baseline, timed, rate_from=None):
+def _cluster_row(art, transport, name, work, baseline, timed, rate_from=None,
+                 **svc_kw):
     with ClusterService.from_dir(
         art, transport=transport, batch_window_ms=2.0,
-        max_queue_per_shard=4096,
+        max_queue_per_shard=4096, **svc_kw,
     ) as svc:
         qps = _bench(svc, work, timed)
         s = svc.stats().summary()
@@ -122,20 +127,34 @@ def run() -> None:
 
     with tempfile.TemporaryDirectory() as art:
         # one publish feeds every transport row: the thread rows mmap the
-        # shard arrays in-process, the process rows mmap the same inodes
-        # from worker subprocesses — identical bytes, identical results
-        build_cluster(tree, SHARDS, art)
-        for transport in ("thread", "process"):
-            _cluster_row(
-                art, transport, "zipf", work, mono_zipf, timed,
-                rate_from="stats",
-            )
-            if transport == "process" and SMOKE:
-                # spawning a second fleet for the no-coalescing row is the
-                # one cost smoke skips; the thread row still reports it
-                print("# cluster_unique,process: skipped in smoke")
-                continue
-            _cluster_row(art, transport, "unique", unique, mono_uniq, timed)
+        # shard arrays in-process, the process and remote rows mmap the
+        # same inodes from worker/server processes — identical bytes,
+        # identical results
+        manifest = build_cluster(tree, SHARDS, art)
+        for transport in ("thread", "process", "remote"):
+            servers, svc_kw = [], {}
+            if transport == "remote":
+                servers, endpoints = launch_cluster_servers(
+                    art, manifest, batch_window_ms=2.0
+                )
+                svc_kw["endpoints"] = endpoints
+            try:
+                _cluster_row(
+                    art, transport, "zipf", work, mono_zipf, timed,
+                    rate_from="stats", **svc_kw,
+                )
+                if transport != "thread" and SMOKE:
+                    # spawning a second fleet for the no-coalescing row is
+                    # the one cost smoke skips; the thread row reports it
+                    print(f"# cluster_unique,{transport}: skipped in smoke")
+                    continue
+                _cluster_row(
+                    art, transport, "unique", unique, mono_uniq, timed,
+                    **svc_kw,
+                )
+            finally:
+                for proc in servers:
+                    proc.terminate()
 
         # overload behaviour: a tiny per-shard queue sheds typed, never
         # collapses (thread transport; admission lives in the router and is

@@ -5,10 +5,12 @@
 Walks the full production path: partition the corpus into per-shard DAG
 indices, publish them as a cluster artifact (atomic manifest swap), reopen
 the artifact through the chosen worker transport — ``thread`` (in-process
-engines) or ``process`` (one subprocess per shard over the mmap'd
-artifact) — scatter-gather queries through admission control, then perform
-a rolling republish against the live service and print the rolled-up
-cluster stats.
+engines), ``process`` (one subprocess per shard over the mmap'd artifact),
+or ``remote`` (standalone shard servers on localhost sockets, their
+endpoints recorded in ``cluster.json`` exactly as a multi-host deployment
+would) — scatter-gather queries through admission control, then perform a
+rolling republish against the live service (remote shards hot-swap through
+the server's ``reload`` op) and print the rolled-up cluster stats.
 """
 import os
 import sys
@@ -18,7 +20,13 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.cluster import ClusterService, build_cluster, rolling_publish  # noqa: E402
+from repro.cluster import (  # noqa: E402
+    ClusterService,
+    build_cluster,
+    rolling_publish,
+    set_cluster_endpoints,
+)
+from repro.cluster.workers.server import launch_cluster_servers  # noqa: E402
 from repro.core import KeywordSearchEngine  # noqa: E402
 from repro.data import QUERIES, generate_discogs_tree  # noqa: E402
 
@@ -38,33 +46,55 @@ def main() -> None:
             f"{manifest['num_docs']} docs, {manifest['num_nodes']} nodes -> {path}"
         )
 
+        servers = []
+        if transport == "remote":
+            # one standalone shard server per shard (here all on localhost;
+            # in production each runs on its shard's host).  Recording the
+            # endpoints in cluster.json is all the router needs — from_dir
+            # picks them up without an endpoints argument.
+            servers, endpoints = launch_cluster_servers(
+                path, manifest, batch_window_ms=2.0
+            )
+            for i, ep in enumerate(endpoints):
+                print(f"  shard {i} server listening at {ep}")
+            set_cluster_endpoints(path, endpoints)
+
         mono = KeywordSearchEngine(tree)  # equivalence witness
-        with ClusterService.from_dir(
-            path, transport=transport, batch_window_ms=2.0
-        ) as svc:
-            print(f"serving via {transport} workers")
-            for name, (_cat, kws) in QUERIES.items():
-                for sem in ("slca", "elca"):
-                    got = svc.query(kws, semantics=sem)
-                    want = mono.query(kws, semantics=sem, backend="scalar")
-                    tag = "==" if np.array_equal(got, want) else "!!"
-                    print(f"  {name} {sem:4s} {tag} {got.size} results")
-            # a hot-query burst: identical in-flight queries coalesce into
-            # one scatter-gather execution (see `coalesced` in the stats)
-            futs = [svc.submit(QUERIES["Q4"][1]) for _ in range(20)]
-            for f in futs:
-                f.result()
-            # rolling republish against the live service: every shard is
-            # re-indexed and hot-swapped, generations bump, zero queries drop
-            m = rolling_publish(path, tree, service=svc)
-            gens = [s["generation"] for s in m["shards"]]
-            got = svc.query(QUERIES["Q4"][1])
-            want = mono.query(QUERIES["Q4"][1], backend="scalar")
-            tag = "==" if np.array_equal(got, want) else "!!"
-            print(f"\nrolling republish: generations={gens}, post-swap {tag}")
-            print("\ncluster stats:")
-            for key, val in sorted(svc.stats().summary().items()):
-                print(f"  {key}: {val}")
+        try:
+            _serve(path, transport, mono, tree)
+        finally:
+            for proc in servers:
+                proc.terminate()
+
+
+def _serve(path: str, transport: str, mono, tree) -> None:
+    with ClusterService.from_dir(
+        path, transport=transport, batch_window_ms=2.0
+    ) as svc:
+        print(f"serving via {transport} workers ({svc.pool.locality})")
+        for name, (_cat, kws) in QUERIES.items():
+            for sem in ("slca", "elca"):
+                got = svc.query(kws, semantics=sem)
+                want = mono.query(kws, semantics=sem, backend="scalar")
+                tag = "==" if np.array_equal(got, want) else "!!"
+                print(f"  {name} {sem:4s} {tag} {got.size} results")
+        # a hot-query burst: identical in-flight queries coalesce into
+        # one scatter-gather execution (see `coalesced` in the stats)
+        futs = [svc.submit(QUERIES["Q4"][1]) for _ in range(20)]
+        for f in futs:
+            f.result()
+        # rolling republish against the live service: every shard is
+        # re-indexed and hot-swapped, generations bump, zero queries drop
+        # (remote shards reload through their server's `reload` op)
+        m = rolling_publish(path, tree, service=svc)
+        gens = [s["generation"] for s in m["shards"]]
+        got = svc.query(QUERIES["Q4"][1])
+        want = mono.query(QUERIES["Q4"][1], backend="scalar")
+        tag = "==" if np.array_equal(got, want) else "!!"
+        print(f"\nrolling republish: generations={gens}, post-swap {tag}")
+        print("\ncluster stats:")
+        for key, val in sorted(svc.stats().summary().items()):
+            print(f"  {key}: {val}")
 
 
 if __name__ == "__main__":

@@ -11,22 +11,31 @@
 See :mod:`repro.cluster.partition` for the partitioning/exactness story,
 :mod:`repro.cluster.router` for scatter-gather semantics,
 :mod:`repro.cluster.workers` for the transport-agnostic worker layer
-(thread vs process-isolated shard workers over mmap'd artifacts), and
+(thread, process-isolated, and remote shard workers over mmap'd
+artifacts — the remote server entrypoint is
+``python -m repro.cluster.workers.server``), and
 :mod:`repro.cluster.admission` for overload behaviour.
 """
+from repro.core.io import migrate_cluster
+
 from .admission import AdmissionController, Overloaded
 from .manifest import (
     RoutingTable,
     build_cluster,
     load_cluster,
     load_cluster_layout,
+    manifest_endpoints,
     rolling_publish,
+    set_cluster_endpoints,
 )
 from .partition import ShardSpec, partition_corpus, shard_tree, split_doc_ranges
 from .router import ClusterService
 from .workers import (
     ProcessPool,
     ProcessWorker,
+    ProtocolError,
+    RemotePool,
+    RemoteWorker,
     ThreadPool,
     ThreadWorker,
     Worker,
@@ -43,6 +52,9 @@ __all__ = [
     "Overloaded",
     "ProcessPool",
     "ProcessWorker",
+    "ProtocolError",
+    "RemotePool",
+    "RemoteWorker",
     "RoutingTable",
     "ShardSpec",
     "ShardWorker",
@@ -54,8 +66,11 @@ __all__ = [
     "build_cluster",
     "load_cluster",
     "load_cluster_layout",
+    "manifest_endpoints",
+    "migrate_cluster",
     "partition_corpus",
     "rolling_publish",
+    "set_cluster_endpoints",
     "shard_tree",
     "split_doc_ranges",
 ]

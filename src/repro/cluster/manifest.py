@@ -123,7 +123,7 @@ def build_cluster(tree: XMLTree, num_shards: int, path: str) -> dict:
         "num_keywords": len(tree.vocab),
         "routing_file": routing_file,
         "shards": [
-            dict(spec.to_json(), dir=d, generation=0)
+            dict(spec.to_json(), dir=d, generation=0, endpoint=None)
             for spec, d in zip(specs, shard_dirs)
         ],
     }
@@ -157,6 +157,36 @@ def load_cluster_layout(
         for obj in manifest["shards"]
     ]
     return manifest, routing, entries
+
+
+def manifest_endpoints(manifest: dict) -> list[str | None]:
+    """Per-shard remote endpoints from a cluster manifest (None = local).
+
+    Every v3+ manifest carries an ``endpoint`` per shard entry —
+    ``"host:port"`` of a standalone shard server
+    (:mod:`repro.cluster.workers.server`), or null for a shard served from
+    its local artifact dir.
+    """
+    return [obj.get("endpoint") for obj in manifest["shards"]]
+
+
+def set_cluster_endpoints(path: str, endpoints: list[str | None]) -> dict:
+    """Record where each shard's server lives, committing the manifest.
+
+    ``endpoints[i]`` is ``"host:port"`` or None (serve shard ``i`` locally).
+    This is deployment metadata, not content: generations, dirs, and the
+    routing file are untouched, so it composes with a live
+    ``rolling_publish``.  Returns the committed manifest.
+    """
+    manifest = index_io.load_cluster_manifest(path)
+    if len(endpoints) != len(manifest["shards"]):
+        raise ValueError(
+            f"{len(manifest['shards'])} shards but {len(endpoints)} endpoints"
+        )
+    for obj, ep in zip(manifest["shards"], endpoints):
+        obj["endpoint"] = ep
+    index_io.save_cluster_manifest(path, manifest)
+    return manifest
 
 
 def load_cluster(

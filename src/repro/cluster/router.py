@@ -3,8 +3,11 @@
 One router fronts N shard workers behind the transport-agnostic worker
 seam (:mod:`repro.cluster.workers`): every worker speaks
 ``submit/doc_stats/stats/drain/close``, whether it is a thread in this
-process (ThreadWorker) or a subprocess over the shard's mmap'd artifact
-(ProcessWorker, supervised by a ProcessPool).  The router itself owns no
+process (ThreadWorker), a subprocess over the shard's mmap'd artifact
+(ProcessWorker, supervised by a ProcessPool), or a socket to a standalone
+shard server on another host (RemoteWorker, reconnected with backoff by a
+RemotePool; shards with no endpoint configured stay local — the pool
+prefers a process worker over a network hop).  The router itself owns no
 engines and no drain threads — it is routing, admission, gather, and merge
 logic.  A query's life:
 
@@ -52,6 +55,7 @@ results.  Only the corpus root needs cross-shard reasoning:
 from __future__ import annotations
 
 import shutil
+import subprocess
 import tempfile
 import threading
 import time
@@ -68,9 +72,16 @@ from .manifest import (
     build_cluster,
     load_cluster,
     load_cluster_layout,
+    manifest_endpoints,
 )
 from .partition import partition_corpus
-from .workers import ProcessPool, ThreadPool, Worker, WorkerPool
+from .workers import ProcessPool, RemotePool, ThreadPool, Worker, WorkerPool
+from .workers.base import DEFAULT_OP_TIMEOUT
+
+# End-to-end deadline for one routed query (scatter, execute, gather,
+# merge) — deliberately wider than the per-RPC DEFAULT_OP_TIMEOUT, since a
+# query spans several round-trips plus a possible first-launch compile.
+DEFAULT_QUERY_TIMEOUT = 2 * DEFAULT_OP_TIMEOUT
 
 _EMPTY = np.zeros(0, dtype=np.int64)
 
@@ -116,9 +127,16 @@ class ClusterService:
         routing: RoutingTable,
         *,
         max_queue_per_shard: int = 256,
+        op_timeout: float | None = DEFAULT_QUERY_TIMEOUT,
     ):
         self.routing = routing
         self.pool = pool
+        # per-op deadline for the blocking waits this service performs on
+        # behalf of callers (query/map results, the ELCA doc_stats gather):
+        # a shard that stops answering mid-gather fails typed
+        # (TimeoutError / WorkerDied) after this long instead of hanging
+        # the caller forever.  None disables the deadline.
+        self.op_timeout = op_timeout
         self.admission = AdmissionController(
             len(pool.workers), max_queue_per_shard
         )
@@ -127,6 +145,7 @@ class ClusterService:
         self._closed = False
         self._close_done = False
         self._owned_dir: str | None = None  # tempdir for from_tree(process)
+        self._owned_servers: list[subprocess.Popen] = []  # from_tree(remote)
         self._inflight: dict[tuple, _Gather] = {}
         self._active = 0  # admitted gathers not yet finalized
         self._refs: dict[Worker, int] = {}  # in-flight gathers per worker
@@ -161,6 +180,8 @@ class ClusterService:
         max_batch: int = 64,
         batch_window_ms: float = 2.0,
         max_queue_per_shard: int = 256,
+        op_timeout: float | None = DEFAULT_QUERY_TIMEOUT,
+        endpoints: list[str | None] | dict[int, str] | None = None,
         **pool_kw,
     ) -> ClusterService:
         """Serve a published cluster artifact.
@@ -168,7 +189,14 @@ class ClusterService:
         ``transport="thread"`` loads every shard engine in-process (arrays
         stay mmapped); ``transport="process"`` spawns one subprocess per
         shard over its artifact dir — same page-cache pages, real
-        parallelism, crash isolation.
+        parallelism, crash isolation; ``transport="remote"`` connects to
+        standalone shard servers (:mod:`repro.cluster.workers.server`) —
+        shards on other hosts, same protocol framing.  Remote endpoints
+        come from ``endpoints`` (a per-shard list, None entries = local, or
+        a ``{shard: "host:port"}`` dict) or, when omitted, from the
+        manifest's per-shard ``endpoint`` fields; any shard with no
+        endpoint configured is preferred *local* and served by a process
+        worker over its artifact dir.
         """
         if transport == "thread":
             shards, routing, _ = load_cluster(path, mmap=mmap)
@@ -188,11 +216,32 @@ class ClusterService:
                 batch_window_ms=batch_window_ms,
                 **pool_kw,
             )
+        elif transport == "remote":
+            manifest, routing, entries = load_cluster_layout(path, mmap=mmap)
+            if endpoints is None:
+                eps = manifest_endpoints(manifest)
+            elif isinstance(endpoints, dict):
+                eps = [endpoints.get(i) for i in range(len(entries))]
+            else:
+                eps = list(endpoints)
+            pool = RemotePool(
+                entries,
+                endpoints=eps,
+                backends=backends,
+                max_batch=max_batch,
+                batch_window_ms=batch_window_ms,
+                **pool_kw,
+            )
         else:
             raise ValueError(
-                f"transport must be thread|process, got {transport!r}"
+                f"transport must be thread|process|remote, got {transport!r}"
             )
-        return cls(pool, routing, max_queue_per_shard=max_queue_per_shard)
+        return cls(
+            pool,
+            routing,
+            max_queue_per_shard=max_queue_per_shard,
+            op_timeout=op_timeout,
+        )
 
     @classmethod
     def from_tree(
@@ -206,7 +255,11 @@ class ClusterService:
 
         The process transport needs on-disk artifacts, so it publishes the
         cluster into a service-owned temp directory first (reclaimed at
-        close); the thread transport stays fully in memory.
+        close); the thread transport stays fully in memory.  The remote
+        transport additionally launches one standalone shard server per
+        shard on localhost (ephemeral ports, owned by the service and
+        terminated at close) — real sockets, the full remote path, no
+        external deployment needed.
         """
         if transport == "process":
             workdir = tempfile.mkdtemp(prefix="cluster-proc-")
@@ -218,13 +271,42 @@ class ClusterService:
                 raise
             svc._owned_dir = workdir
             return svc
+        if transport == "remote":
+            from .workers.server import launch_cluster_servers
+
+            workdir = tempfile.mkdtemp(prefix="cluster-remote-")
+            procs: list[subprocess.Popen] = []
+            try:
+                manifest = build_cluster(tree, num_shards, workdir)
+                procs, eps = launch_cluster_servers(
+                    workdir,
+                    manifest,
+                    backends=kw.get("backends", "jax"),
+                    max_batch=kw.get("max_batch", 64),
+                    batch_window_ms=kw.get("batch_window_ms", 2.0),
+                )
+                svc = cls.from_dir(
+                    workdir, transport="remote", endpoints=eps, **kw
+                )
+            except BaseException:
+                for p in procs:
+                    p.kill()
+                shutil.rmtree(workdir, ignore_errors=True)
+                raise
+            svc._owned_dir = workdir
+            svc._owned_servers = procs
+            return svc
         max_queue = kw.pop("max_queue_per_shard", 256)
+        op_timeout = kw.pop("op_timeout", DEFAULT_QUERY_TIMEOUT)
         shards, masks, root_kw_ids = partition_corpus(tree, num_shards)
         routing = RoutingTable(
             vocab=tree.vocab, masks=masks, root_kw_ids=root_kw_ids
         )
         return cls(
-            ThreadPool(shards, **kw), routing, max_queue_per_shard=max_queue
+            ThreadPool(shards, **kw),
+            routing,
+            max_queue_per_shard=max_queue,
+            op_timeout=op_timeout,
         )
 
     @property
@@ -319,14 +401,28 @@ class ClusterService:
             )
         return fut
 
-    def query(self, keywords: list[str] | str, semantics: str = "slca") -> np.ndarray:
-        return self.submit(keywords, semantics).result()
+    def query(
+        self,
+        keywords: list[str] | str,
+        semantics: str = "slca",
+        timeout: float | None = None,
+    ) -> np.ndarray:
+        """Blocking submit; waits at most ``timeout`` (default: the
+        service's ``op_timeout``) and raises ``TimeoutError`` typed rather
+        than hanging on a shard that stopped answering."""
+        return self.submit(keywords, semantics).result(
+            self.op_timeout if timeout is None else timeout
+        )
 
     def map(
-        self, queries: list[list[str] | str], semantics: str = "slca"
+        self,
+        queries: list[list[str] | str],
+        semantics: str = "slca",
+        timeout: float | None = None,
     ) -> list[np.ndarray]:
+        deadline = self.op_timeout if timeout is None else timeout
         futs = [self.submit(q, semantics) for q in queries]
-        return [f.result() for f in futs]
+        return [f.result(deadline) for f in futs]
 
     # ------------------------------------------------------------------ #
     # Gather + merge
@@ -422,7 +518,10 @@ class ClusterService:
         docs_k = np.zeros(len(state.kw_ids), dtype=np.int64)
         full = 0
         for _s, f in stat_futs:
-            dk, fl = f.result(timeout=60.0)
+            # bounded: a worker that stops answering mid-gather fails this
+            # gather typed (the _finalize try/except delivers it to every
+            # caller) instead of wedging a merge-executor thread forever
+            dk, fl = f.result(timeout=self.op_timeout)
             docs_k += dk
             full += fl
         for j, k in enumerate(state.kw_ids):
@@ -492,6 +591,7 @@ class ClusterService:
             )
             workers = list(self.pool.workers)
         snap.data["transport"] = self.pool.transport
+        snap.data["worker_locality"] = self.pool.locality
         snap.data["worker_respawns"] = getattr(self.pool, "respawns", 0)
         snap.data.update(self.admission.snapshot())
         # QueryStats.merge sums the shard counters and recomputes the plan
@@ -544,6 +644,14 @@ class ClusterService:
         for w in retired:
             w.close(timeout)
         self.pool.close(timeout)
+        for p in self._owned_servers:  # from_tree(remote)'s local servers
+            p.terminate()
+        for p in self._owned_servers:
+            try:
+                p.wait(5.0)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait(5.0)
         if self._owned_dir is not None:
             shutil.rmtree(self._owned_dir, ignore_errors=True)
         with self._lock:

@@ -1,22 +1,33 @@
 """Transport-agnostic shard worker layer (the cluster's execution seam).
 
-    router  ->  WorkerPool  ->  ThreadWorker | ProcessWorker  ->  engine
-                                     (in-process)  (subprocess over the
-                                                    mmap'd shard artifact)
+    router  ->  WorkerPool  ->  ThreadWorker | ProcessWorker | RemoteWorker
+                                 (in-process)  (subprocess      (TCP to a
+                                                over the mmap'd  standalone
+                                                shard artifact)  shard server)
 
-See :mod:`.base` for the Worker protocol and the architecture story,
-:mod:`.proto` for the pipe RPC framing, :mod:`.subproc` for the worker
-subprocess entrypoint, and :mod:`.pool` for supervision (crash detection,
-bounded respawn, hot-swap installs).
+See :mod:`.base` for the Worker protocol, the shared RPC client, and the
+architecture story, :mod:`.proto` for the frame protocol (pipe and socket),
+:mod:`.subproc` for the worker subprocess entrypoint, :mod:`.server` for
+the standalone TCP shard server (+ :func:`~.server.launch_server`), and
+:mod:`.pool` for supervision (crash detection, bounded respawn/reconnect,
+hot-swap installs).
 """
-from .base import Worker, WorkerDied, shard_doc_stats
-from .pool import ProcessPool, ThreadPool, WorkerPool
+from .base import RpcWorker, Worker, WorkerDied, shard_doc_stats
+from .pool import ProcessPool, RemotePool, SupervisedPool, ThreadPool, WorkerPool
 from .process import ProcessWorker
+from .proto import MAX_FRAME_BYTES, ProtocolError
+from .remote import RemoteWorker
 from .thread import ThreadWorker
 
 __all__ = [
+    "MAX_FRAME_BYTES",
     "ProcessPool",
     "ProcessWorker",
+    "ProtocolError",
+    "RemotePool",
+    "RemoteWorker",
+    "RpcWorker",
+    "SupervisedPool",
     "ThreadPool",
     "ThreadWorker",
     "Worker",

@@ -8,21 +8,30 @@ swapped-out workers only when idle); the pool handles process/engine-level
 lifetime.
 
 :class:`ThreadPool` builds ThreadWorkers from in-process engines.
-:class:`ProcessPool` spawns one subprocess per shard over its artifact dir
-and supervises them: a worker that dies outside an intentional shutdown is
-respawned in place (bounded per shard, so a crash-looping artifact cannot
-fork-bomb the host) while the queries that were in flight fail fast with
-the typed ``WorkerDied``.
+:class:`ProcessPool` spawns one subprocess per shard over its artifact dir.
+:class:`RemotePool` connects to standalone shard servers
+(:mod:`~repro.cluster.workers.server`) by endpoint, falling back to a local
+ProcessWorker for any shard with no endpoint configured — locality is a
+per-shard deployment choice, not a pool-wide one.
+
+Both supervised pools share the same crash contract: a worker that dies
+outside an intentional shutdown is replaced in place — respawned
+(ProcessPool) or reconnected with exponential backoff (RemotePool) —
+bounded per shard so a crash-looping artifact or a downed server cannot
+fork-bomb or spin the host, while the queries that were in flight fail
+fast with the typed ``WorkerDied`` (never a hang).
 """
 from __future__ import annotations
 
 import threading
+import time
 
 from repro.core.engine import KeywordSearchEngine
 
 from ..partition import ShardSpec
-from .base import Worker, WorkerDied
+from .base import DEFAULT_OP_TIMEOUT, Worker, WorkerDied
 from .process import ProcessWorker
+from .remote import RemoteWorker
 from .thread import ThreadWorker
 
 
@@ -35,6 +44,11 @@ class WorkerPool:
         self.workers: list[Worker] = []
         self._lock = threading.Lock()
         self._closed = False
+
+    @property
+    def locality(self) -> list[str]:
+        """Per-shard transport actually in use (pools may mix them)."""
+        return [getattr(w, "transport", self.transport) for w in self.workers]
 
     def spawn(self, i: int, path: str | None = None) -> Worker:
         """Build (but do not install) a replacement worker for shard ``i``,
@@ -98,7 +112,78 @@ class ThreadPool(WorkerPool):
         )
 
 
-class ProcessPool(WorkerPool):
+class SupervisedPool(WorkerPool):
+    """Bounded in-place replacement, shared by the process + remote pools.
+
+    The budget discipline: each shard gets ``max_respawns`` replacement
+    attempts; a successful ``install`` (a *new* artifact) resets the
+    shard's budget.  ``_take_respawn_budget`` / ``_install_replacement``
+    are the race-safe halves every supervisor callback is built from — a
+    respawn that lost to a reload or a close is discarded, never leaked.
+    """
+
+    def __init__(
+        self, n: int, *, max_respawns: int, spawn_timeout: float
+    ) -> None:
+        super().__init__()
+        self._max_respawns = int(max_respawns)
+        self._respawns_left = [self._max_respawns] * n
+        self._spawn_timeout = float(spawn_timeout)
+        self.respawns = 0  # total, for the stats rollup
+
+    def install(self, i: int, worker: Worker) -> Worker:
+        old = super().install(i, worker)
+        with self._lock:
+            # a fresh artifact gets a fresh crash budget
+            self._respawns_left[i] = self._max_respawns
+        return old
+
+    def _ready_or_raise(self, worker, timeout: float):
+        """Wait for a freshly built worker; on failure close it and raise
+        the typed ``WorkerDied`` (spawn verification, not supervision)."""
+        if not worker.wait_ready(timeout):
+            err = worker._dead or WorkerDied(
+                worker.spec.index, f"not ready after {timeout}s"
+            )
+            worker.close(timeout=5.0)
+            raise err
+        return worker
+
+    def _take_respawn_budget(self, worker) -> int | None:
+        """Claim one replacement attempt for ``worker``'s shard.
+
+        Returns the attempt ordinal (1-based), or None when no respawn
+        should happen: the pool is closing, the dead worker already lost a
+        race to a reload, or the shard's budget is spent.
+        """
+        i = worker.spec.index
+        with self._lock:
+            if (
+                self._closed
+                or self.workers[i] is not worker  # raced a reload: obsolete
+                or self._respawns_left[i] <= 0
+            ):
+                return None
+            self._respawns_left[i] -= 1
+            self.respawns += 1
+            return self._max_respawns - self._respawns_left[i]
+
+    def _install_replacement(self, worker, replacement) -> bool:
+        """Swap ``replacement`` in for ``worker`` unless the world moved on
+        (close or reload raced us), in which case the replacement is
+        discarded on a background thread."""
+        i = worker.spec.index
+        with self._lock:
+            if self._closed or self.workers[i] is not worker:
+                threading.Thread(
+                    target=replacement.close, args=(5.0,), daemon=True
+                ).start()
+                return False
+            self.workers[i] = replacement
+            return True
+
+
+class ProcessPool(SupervisedPool):
     """Per-shard subprocesses over mmap'd artifact dirs, supervised."""
 
     transport = "process"
@@ -112,29 +197,28 @@ class ProcessPool(WorkerPool):
         batch_window_ms: float = 2.0,
         max_respawns: int = 3,
         spawn_timeout: float = 300.0,
+        op_timeout: float = DEFAULT_OP_TIMEOUT,
     ):
-        super().__init__()
+        super().__init__(
+            len(shards), max_respawns=max_respawns, spawn_timeout=spawn_timeout
+        )
         backends = _per_shard(backends, len(shards))
         self._backends = backends
         self._max_batch = max_batch
         self._batch_window_ms = batch_window_ms
-        self._max_respawns = int(max_respawns)
-        self._respawns_left = [self._max_respawns] * len(shards)
-        self._spawn_timeout = float(spawn_timeout)
-        self.respawns = 0  # total, for the stats rollup
+        self._op_timeout = float(op_timeout)
         # spawn everything first (children load their artifacts in
         # parallel), then wait for readiness
         self.workers = [
             self._spawn_worker(spec, d, be)
             for (spec, d), be in zip(shards, backends)
         ]
-        for w in self.workers:
-            if not w.wait_ready(spawn_timeout):
-                err = w._dead or WorkerDied(
-                    w.spec.index, f"not ready after {spawn_timeout}s"
-                )
-                self.close(timeout=5.0)
-                raise err
+        try:
+            for w in self.workers:
+                self._ready_or_raise(w, self._spawn_timeout)
+        except WorkerDied:
+            self.close(timeout=5.0)
+            raise
 
     def _spawn_worker(
         self, spec: ShardSpec, shard_dir: str, backend: str
@@ -145,6 +229,7 @@ class ProcessPool(WorkerPool):
             backend=backend,
             max_batch=self._max_batch,
             batch_window_ms=self._batch_window_ms,
+            op_timeout=self._op_timeout,
             on_death=self._on_death,
         )
 
@@ -159,20 +244,7 @@ class ProcessPool(WorkerPool):
         worker = self._spawn_worker(
             cur.spec, path or cur.shard_dir, self._backends[i]
         )
-        if not worker.wait_ready(self._spawn_timeout):
-            err = worker._dead or WorkerDied(
-                cur.spec.index, f"not ready after {self._spawn_timeout}s"
-            )
-            worker.close(timeout=5.0)
-            raise err
-        return worker
-
-    def install(self, i: int, worker: Worker) -> Worker:
-        old = super().install(i, worker)
-        with self._lock:
-            # a fresh artifact gets a fresh crash budget
-            self._respawns_left[i] = self._max_respawns
-        return old
+        return self._ready_or_raise(worker, self._spawn_timeout)
 
     def _on_death(self, worker: ProcessWorker) -> None:
         """Reader-thread callback on unexpected death: bounded respawn.
@@ -181,26 +253,144 @@ class ProcessPool(WorkerPool):
         ``WorkerDied`` (fail-fast, the callers retry or surface the error);
         respawning here restores capacity for everything that follows.
         """
-        i = worker.spec.index
-        with self._lock:
-            if (
-                self._closed
-                or self.workers[i] is not worker  # raced a reload: obsolete
-                or self._respawns_left[i] <= 0
-            ):
-                return
-            self._respawns_left[i] -= 1
-            self.respawns += 1
+        if self._take_respawn_budget(worker) is None:
+            return
         replacement = self._spawn_worker(
-            worker.spec, worker.shard_dir, self._backends[i]
+            worker.spec, worker.shard_dir, self._backends[worker.spec.index]
         )
-        with self._lock:
-            if self._closed or self.workers[i] is not worker:
-                threading.Thread(
-                    target=replacement.close, args=(5.0,), daemon=True
-                ).start()
+        self._install_replacement(worker, replacement)
+
+
+class RemotePool(SupervisedPool):
+    """Shard workers behind TCP endpoints, with local process fallback.
+
+    ``endpoints[i]`` is ``"host:port"`` for a shard served by a standalone
+    shard server, or None to run that shard as a local subprocess over its
+    artifact dir — when both a local artifact and no endpoint are
+    configured the pool prefers the local worker (no network hop, shared
+    page cache).  Supervision is per-locality: a dead local worker is
+    respawned like ProcessPool; a dead connection is *re-dialed* with
+    exponential backoff (the server owns the engine; reconnecting is
+    cheap), bounded by the same per-shard budget so a downed server
+    surfaces as a typed ``WorkerDied`` instead of a spin or a hang.
+
+    ``spawn(i, path)`` — the reload primitive — asks a remote shard's
+    server to hot-swap via the ``reload`` op (``path`` names a directory on
+    the *server's* host) and returns a fresh connection; in-flight queries
+    on the old connection finish on the old engine, exactly the process
+    transport's contract.
+    """
+
+    transport = "remote"
+
+    def __init__(
+        self,
+        shards: list[tuple[ShardSpec, str]],  # (spec, artifact dir)
+        *,
+        endpoints: list[str | None],
+        backends: str | list[str] = "jax",
+        max_batch: int = 64,
+        batch_window_ms: float = 2.0,
+        max_respawns: int = 3,
+        spawn_timeout: float = 300.0,
+        connect_timeout: float = 30.0,
+        op_timeout: float = DEFAULT_OP_TIMEOUT,
+        reconnect_backoff: float = 0.1,
+    ):
+        super().__init__(
+            len(shards), max_respawns=max_respawns, spawn_timeout=spawn_timeout
+        )
+        if len(endpoints) != len(shards):
+            raise ValueError(
+                f"{len(shards)} shards but {len(endpoints)} endpoints"
+            )
+        self._specs = [spec for spec, _ in shards]
+        self._dirs = [d for _, d in shards]
+        self._endpoints = list(endpoints)
+        self._backends = _per_shard(backends, len(shards))
+        self._max_batch = max_batch
+        self._batch_window_ms = batch_window_ms
+        self._connect_timeout = float(connect_timeout)
+        self._op_timeout = float(op_timeout)
+        self._backoff = float(reconnect_backoff)
+        try:
+            for i in range(len(shards)):
+                self.workers.append(self._build(i))
+            for w in self.workers:
+                self._ready_or_raise(w, self._spawn_timeout)
+        except WorkerDied:
+            self.close(timeout=5.0)
+            raise
+
+    def _local_worker(self, i: int, shard_dir: str) -> ProcessWorker:
+        """The single construction site for this pool's local workers, so
+        initial builds, reload spawns, and crash respawns can never drift
+        out of configuration sync."""
+        return ProcessWorker(
+            self._specs[i],
+            shard_dir,
+            backend=self._backends[i],
+            max_batch=self._max_batch,
+            batch_window_ms=self._batch_window_ms,
+            op_timeout=self._op_timeout,
+            on_death=self._on_death,
+        )
+
+    def _build(self, i: int) -> Worker:
+        """Fresh worker for shard ``i`` at its configured locality.
+
+        Raises :class:`WorkerDied` when the endpoint does not answer (the
+        supervisor's reconnect loop treats that as one burned attempt)."""
+        if self._endpoints[i] is None:
+            return self._local_worker(i, self._dirs[i])
+        return RemoteWorker(
+            self._specs[i],
+            self._endpoints[i],
+            connect_timeout=self._connect_timeout,
+            op_timeout=self._op_timeout,
+            on_death=self._on_death,
+        )
+
+    def spawn(self, i: int, path: str | None = None) -> Worker:
+        if self._endpoints[i] is None:
+            worker = self._local_worker(i, path or self._dirs[i])
+            return self._ready_or_raise(worker, self._spawn_timeout)
+        worker = self._ready_or_raise(self._build(i), self._spawn_timeout)
+        if path is not None:
+            try:
+                worker.reload(path, timeout=self._spawn_timeout)
+            except Exception as e:
+                worker.close(timeout=5.0)
+                raise WorkerDied(
+                    i, f"remote reload onto {path} failed: {e}"
+                ) from e
+        return worker
+
+    def _on_death(self, worker) -> None:
+        """Reader-thread callback: respawn locally, reconnect remotely."""
+        i = worker.spec.index
+        if self._endpoints[i] is None:
+            if self._take_respawn_budget(worker) is None:
                 return
-            self.workers[i] = replacement
+            self._install_replacement(
+                worker, self._local_worker(i, worker.shard_dir)
+            )
+            return
+        while True:
+            attempt = self._take_respawn_budget(worker)
+            if attempt is None:
+                return
+            # runs on the dead worker's reader thread — sleeping here blocks
+            # nobody; in-flight futures already failed with WorkerDied
+            time.sleep(min(self._backoff * (2 ** (attempt - 1)), 2.0))
+            try:
+                replacement = self._ready_or_raise(
+                    self._build(i), self._spawn_timeout
+                )
+            except WorkerDied:
+                continue  # the per-shard budget bounds this loop
+            self._install_replacement(worker, replacement)
+            return
 
 
 def _per_shard(backends: str | list[str], n: int) -> list[str]:

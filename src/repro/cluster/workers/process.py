@@ -1,10 +1,9 @@
 """ProcessWorker: one spawned subprocess per shard over its mmap'd artifact.
 
-The parent side of the :mod:`~repro.cluster.workers.subproc` RPC.  Requests
-are *pipelined*: ``submit``/``doc_stats`` assign a request id, register a
-Future, write one frame, and return — a single reader thread matches
-response frames (which arrive in completion order, not request order) back
-to their Futures.  The subprocess loads the shard with
+The parent side of the :mod:`~repro.cluster.workers.subproc` RPC — the
+pipelined client machinery (request registry, reader thread, typed death)
+is the shared :class:`~repro.cluster.workers.base.RpcWorker`; this class
+owns the ``Popen`` carrier.  The subprocess loads the shard with
 ``KeywordSearchEngine.load(mmap=True)``, so N workers + the publisher share
 one page-cache copy of every index page; nothing crosses the pipe but
 keyword strings in and result ``.npy`` vectors out.
@@ -20,15 +19,12 @@ from __future__ import annotations
 import os
 import subprocess
 import sys
-import threading
-from concurrent.futures import Future, InvalidStateError
 
 import repro
-from repro.core.engine import QueryStats
 
 from ..partition import ShardSpec
-from .base import WorkerDied
-from .proto import load_array, read_frame, write_frame
+from .base import DEFAULT_OP_TIMEOUT, RpcWorker
+from .proto import write_frame
 
 
 def _pythonpath_for_child() -> str:
@@ -38,13 +34,14 @@ def _pythonpath_for_child() -> str:
     return pkg_root + (os.pathsep + prev if prev else "")
 
 
-class ProcessWorker:
+class ProcessWorker(RpcWorker):
     """Worker seam over a per-shard subprocess (spawned immediately).
 
     Construction is non-blocking: the Popen + reader thread start here, and
     requests written before the child finishes loading simply sit in the
     pipe — callers who want spawn failures surfaced eagerly wait on
-    :meth:`wait_ready` (the pool does, with a timeout).
+    :meth:`~repro.cluster.workers.base.RpcWorker.wait_ready` (the pool
+    does, with a timeout).
     """
 
     transport = "process"
@@ -57,21 +54,14 @@ class ProcessWorker:
         backend: str = "jax",
         max_batch: int = 64,
         batch_window_ms: float = 2.0,
+        op_timeout: float = DEFAULT_OP_TIMEOUT,
         on_death=None,
     ):
-        self.spec = spec
+        super().__init__(spec, op_timeout=op_timeout, on_death=on_death)
         self.shard_dir = os.fspath(shard_dir)
         self.backend = backend
         self.max_batch = max_batch
         self.batch_window_ms = batch_window_ms
-        self.on_death = on_death
-        self.pid: int | None = None
-        self.ready = threading.Event()
-        self._lock = threading.Lock()  # pending registry + frame writes
-        self._pending: dict[int, tuple[str, Future]] = {}
-        self._next_id = 0
-        self._dead: WorkerDied | None = None
-        self._closing = False
         self._drained = False
         env = dict(os.environ, PYTHONPATH=_pythonpath_for_child())
         self._proc = subprocess.Popen(
@@ -87,34 +77,13 @@ class ProcessWorker:
             stdout=subprocess.PIPE,
             env=env,  # stderr inherited: worker tracebacks stay visible
         )
-        self._reader = threading.Thread(
-            target=self._read_loop,
-            name=f"shard{spec.index}-rpc-reader",
-            daemon=True,
-        )
-        self._reader.start()
+        self._rfile = self._proc.stdout
+        self._wfile = self._proc.stdin
+        self._start_reader(f"shard{spec.index}-rpc-reader")
 
     # ------------------------------------------------------------------ #
-    # Worker protocol
+    # Worker protocol (the RPC ops live on RpcWorker)
     # ------------------------------------------------------------------ #
-    def submit(self, keywords: list[str], semantics: str) -> Future:
-        return self._request(
-            {"op": "submit", "keywords": list(keywords), "semantics": semantics}
-        )
-
-    def doc_stats(self, kw_ids: list[int]) -> Future:
-        return self._request(
-            {"op": "doc_stats", "kw_ids": [int(k) for k in kw_ids]}
-        )
-
-    def stats(self) -> QueryStats:
-        try:
-            return self._request({"op": "stats"}).result(timeout=30.0)
-        except Exception:
-            # dead/hung worker: stats collection must never take the
-            # cluster rollup down with it
-            return QueryStats(data={"worker_dead": 1})
-
     def drain(self, timeout: float = 30.0) -> None:
         with self._lock:
             if self._drained:
@@ -145,98 +114,5 @@ class ProcessWorker:
             self._proc.wait(5.0)
         self._reader.join(5.0)
 
-    # ------------------------------------------------------------------ #
-    # Plumbing
-    # ------------------------------------------------------------------ #
-    def wait_ready(self, timeout: float) -> bool:
-        """True once the child loaded its artifact; False = dead/timed out."""
-        self.ready.wait(timeout)
-        return self.ready.is_set() and self._dead is None
-
-    def _request(self, msg: dict) -> Future:
-        fut: Future = Future()
-        with self._lock:
-            if self._dead is not None:
-                raise self._dead
-            rid = self._next_id
-            self._next_id += 1
-            self._pending[rid] = (msg["op"], fut)
-            try:
-                write_frame(self._proc.stdin, dict(msg, id=rid))
-            except (OSError, ValueError) as e:
-                self._pending.pop(rid, None)
-                raise WorkerDied(
-                    self.spec.index, f"pipe write failed: {e}"
-                ) from e
-        return fut
-
-    def _read_loop(self) -> None:
-        detail = "stdout closed (EOF)"
-        try:
-            while True:
-                msg, payload = read_frame(self._proc.stdout)
-                if msg is None:
-                    break
-                if msg.get("op") == "ready":
-                    self.pid = msg.get("pid")
-                    self.ready.set()
-                    continue
-                with self._lock:
-                    op, fut = self._pending.pop(msg["id"], (None, None))
-                if fut is None:
-                    continue
-                self._resolve(op, fut, msg, payload)
-        except Exception as e:
-            detail = f"rpc stream error: {e!r}"
-        rc = self._proc.poll()
-        self._mark_dead(f"{detail} (exit code {rc})")
-
-    def _resolve(self, op: str, fut: Future, msg: dict, payload: bytes) -> None:
-        try:
-            if not msg.get("ok", False):
-                fut.set_exception(
-                    RuntimeError(
-                        f"shard {self.spec.index} worker "
-                        f"{msg.get('etype', 'Error')}: {msg.get('error', '?')}"
-                    )
-                )
-            elif op == "submit":
-                fut.set_result(load_array(payload))
-            elif op == "doc_stats":
-                fut.set_result((load_array(payload), int(msg["full"])))
-            elif op == "stats":
-                fut.set_result(
-                    QueryStats(
-                        data=dict(msg["data"]),
-                        latencies_ms=list(msg["latencies"]),
-                    )
-                )
-            else:
-                fut.set_result(True)  # drain ack and friends
-        except InvalidStateError:
-            pass  # caller cancelled; nothing to deliver
-        except Exception as e:  # malformed payload: fail the one request
-            try:
-                fut.set_exception(e)
-            except InvalidStateError:
-                pass
-
-    def _mark_dead(self, detail: str) -> None:
-        err = WorkerDied(self.spec.index, detail)
-        with self._lock:
-            if self._dead is None:
-                self._dead = err
-            pending = [fut for _, fut in self._pending.values()]
-            self._pending.clear()
-            closing = self._closing
-        self.ready.set()  # unblock wait_ready; it re-checks _dead
-        for fut in pending:
-            try:
-                fut.set_exception(err)
-            except InvalidStateError:
-                pass
-        if not closing and self.on_death is not None:
-            try:
-                self.on_death(self)
-            except Exception:  # supervision must never kill the reader
-                pass
+    def _death_detail(self, detail: str) -> str:
+        return f"{detail} (exit code {self._proc.poll()})"

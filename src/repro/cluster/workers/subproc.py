@@ -4,21 +4,20 @@
         --backend jax --max-batch 64 --batch-window-ms 2.0
 
 Speaks the :mod:`~repro.cluster.workers.proto` frame protocol on
-stdin/stdout.  The serving machinery is exactly
-:class:`~repro.serve.service.QueryService` — the same admission window and
-drain loop the thread transport uses — instantiated over
-``KeywordSearchEngine.load(dir, mmap=True)``, so the shard's index pages
-are shared with every sibling worker (and the publisher) through the page
-cache rather than copied per process.
+stdin/stdout.  The serving machinery — engine state and the op drain loop —
+is shared with the standalone TCP shard server
+(:func:`repro.cluster.workers.server.serve_stream` over
+:class:`~repro.cluster.workers.server.EngineState`); this entrypoint is the
+single-client pipe flavor: ``drain`` terminally flushes the service (the
+parent owns this whole process), ``reload`` is gated off (the ProcessPool
+swaps artifacts by spawning a fresh subprocess), and ``close`` or EOF
+(the parent died) drains and exits.
 
-Request pipelining falls out of the architecture: the read loop turns each
-``submit`` frame into a ``QueryService.submit`` (which returns immediately)
-and replies from the Future's done-callback on the drain thread, so many
+Request pipelining falls out of the architecture: each ``submit`` frame
+becomes a ``QueryService.submit`` (which returns immediately) and the reply
+is written from the Future's done-callback on the drain thread, so many
 queries ride the pipe concurrently, microbatch inside the service, and
-complete out of order.  ``doc_stats``/``stats`` are answered inline (pure
-numpy reads).  ``drain`` flushes the service but keeps the loop alive —
-the parent's shutdown needs late doc_stats answered; ``close`` (or EOF,
-i.e. the parent died) drains and exits.
+complete out of order.
 """
 from __future__ import annotations
 
@@ -44,21 +43,15 @@ def main(argv: list[str] | None = None) -> int:
     os.dup2(sys.stderr.fileno(), sys.stdout.fileno())
     rpc_in = os.fdopen(os.dup(sys.stdin.fileno()), "rb")
 
-    from repro.core.engine import KeywordSearchEngine
-    from repro.serve.service import QueryService
+    from .proto import write_frame
+    from .server import EngineState, serve_stream
 
-    from ..partition import doc_roots
-    from .base import shard_doc_stats
-    from .proto import dump_array, read_frame, write_frame
-
-    engine = KeywordSearchEngine.load(args.dir, mmap=True)
-    svc = QueryService(
-        engine,
+    state = EngineState(
+        args.dir,
+        backend=args.backend,
         max_batch=args.max_batch,
         batch_window_ms=args.batch_window_ms,
-        backend=args.backend,
     )
-    roots = doc_roots(engine.tree)
 
     wlock = threading.Lock()  # replies come from this thread AND the drain
 
@@ -66,72 +59,14 @@ def main(argv: list[str] | None = None) -> int:
         with wlock:
             write_frame(rpc_out, header, payload)
 
-    def fail(rid: int, op: str, exc: BaseException) -> None:
-        reply(
-            {
-                "id": rid, "op": op, "ok": False,
-                "etype": type(exc).__name__, "error": str(exc),
-            }
-        )
-
     reply(
         {
             "op": "ready", "id": -1, "pid": os.getpid(),
-            "shard": args.shard, "num_nodes": int(engine.tree.num_nodes),
+            "shard": args.shard, "num_nodes": int(state.engine.tree.num_nodes),
         }
     )
-
-    drained = False
-    while True:
-        msg, _payload = read_frame(rpc_in)
-        if msg is None:  # parent is gone: drain what we have and exit
-            break
-        op = msg.get("op", "?")
-        rid = int(msg.get("id", -1))
-        try:
-            if op == "submit":
-
-                def done(f, rid=rid):
-                    exc = f.exception()
-                    if exc is not None:
-                        fail(rid, "submit", exc)
-                    else:
-                        buf = dump_array(f.result())
-                        reply({"id": rid, "op": "submit", "ok": True}, buf)
-
-                svc.submit(msg["keywords"], msg["semantics"]).add_done_callback(
-                    done
-                )
-            elif op == "doc_stats":
-                docs_k, full = shard_doc_stats(
-                    engine.base.containment, roots, msg["kw_ids"]
-                )
-                reply(
-                    {"id": rid, "op": "doc_stats", "ok": True, "full": full},
-                    dump_array(docs_k),
-                )
-            elif op == "stats":
-                snap = svc.stats()
-                reply(
-                    {
-                        "id": rid, "op": "stats", "ok": True,
-                        "data": snap.data,
-                        "latencies": snap.latencies_ms,
-                    }
-                )
-            elif op == "drain":
-                if not drained:
-                    svc.close()  # flushes queued submits; replies already sent
-                    drained = True
-                reply({"id": rid, "op": "drain", "ok": True})
-            elif op == "close":
-                break
-            else:
-                fail(rid, op, ValueError(f"unknown op {op!r}"))
-        except Exception as e:  # a bad request must not kill the worker
-            fail(rid, op, e)
-    if not drained:
-        svc.close()
+    serve_stream(rpc_in, reply, state, allow_reload=False, drain_closes=True)
+    state.close()  # EOF before an explicit drain: flush what we have
     return 0
 
 

@@ -39,9 +39,12 @@ FORMAT_VERSION = 1
 _MANIFEST = "manifest.json"
 
 # v2 (PR 3): every entry in ``shards`` carries a ``generation`` stamp,
-# bumped per-shard by the rolling republish path — readers of v1 manifests
-# would silently miss the stamp, so the version gates it out loud
-CLUSTER_FORMAT_VERSION = 2
+# bumped per-shard by the rolling republish path.  v3 (PR 5): every entry
+# carries an ``endpoint`` ("host:port" of a standalone shard server, or
+# null to serve the shard locally) — readers of older manifests would
+# silently miss the fields, so the version gates them out loud; see
+# :func:`migrate_cluster` for the in-place upgrade path.
+CLUSTER_FORMAT_VERSION = 3
 _CLUSTER_MANIFEST = "cluster.json"
 
 
@@ -352,8 +355,54 @@ def load_cluster_manifest(path: str) -> dict:
         manifest = json.load(f)
     version = manifest.get("cluster_format_version")
     if version != CLUSTER_FORMAT_VERSION:
+        hint = (
+            " — repro.core.io.migrate_cluster(path) upgrades old artifacts "
+            "in place"
+            if isinstance(version, int) and version < CLUSTER_FORMAT_VERSION
+            else ""
+        )
         raise ValueError(
             f"cluster artifact {path}: cluster_format_version {version} "
-            f"(this build reads {CLUSTER_FORMAT_VERSION})"
+            f"(this build reads {CLUSTER_FORMAT_VERSION}){hint}"
         )
     return manifest
+
+
+# Upgraders keyed by *source* version: each takes the manifest dict at
+# version N and mutates it to satisfy version N+1.  Chained by
+# :func:`migrate_cluster`, so writing v(N)->v(N+1) once is enough for every
+# older artifact to reach the current format.
+_CLUSTER_MIGRATIONS = {
+    # v1 -> v2: per-shard generation stamps (rolling republish, PR 3)
+    1: lambda m: [s.setdefault("generation", 0) for s in m["shards"]],
+    # v2 -> v3: per-shard remote endpoints (remote transport, PR 5)
+    2: lambda m: [s.setdefault("endpoint", None) for s in m["shards"]],
+}
+
+
+def migrate_cluster(path: str) -> dict:
+    """Upgrade ``<path>/cluster.json`` to the current format, in place.
+
+    Chains the v(N)->v(N+1) upgraders and commits the result with the same
+    atomic-manifest-swap discipline as any publish, so old cluster
+    artifacts load after a format bump instead of demanding a rebuild.  A
+    manifest already at the current version is returned untouched; a
+    *newer* (or unrecognized) version still raises — downgrades cannot be
+    synthesized.  Returns the committed (or already-current) manifest.
+    """
+    with open(os.path.join(path, _CLUSTER_MANIFEST)) as f:
+        manifest = json.load(f)
+    version = manifest.get("cluster_format_version")
+    if version == CLUSTER_FORMAT_VERSION:
+        return manifest
+    if not isinstance(version, int) or version not in _CLUSTER_MIGRATIONS:
+        raise ValueError(
+            f"cluster artifact {path}: cannot migrate "
+            f"cluster_format_version {version} to {CLUSTER_FORMAT_VERSION}"
+        )
+    while version < CLUSTER_FORMAT_VERSION:
+        _CLUSTER_MIGRATIONS[version](manifest)
+        version += 1
+    # save_cluster_manifest stamps the current version and commits atomically
+    save_cluster_manifest(path, manifest)
+    return load_cluster_manifest(path)

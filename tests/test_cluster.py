@@ -7,12 +7,17 @@ the same corpus, for both semantics, across backends — including the corpus
 root, whose SLCA/ELCA status is the only cross-shard case (reconstructed by
 the router from routing bits + per-shard document stats).
 """
+import json
+import os
+import time
+
 import numpy as np
 import pytest
 
 from repro.cluster import (
     ClusterService,
     Overloaded,
+    WorkerDied,
     build_cluster,
     partition_corpus,
     rolling_publish,
@@ -120,7 +125,7 @@ def test_partition_covers_every_node(corpus):
 # --------------------------------------------------------------------------- #
 
 
-@pytest.mark.parametrize("transport", ["thread", "process"])
+@pytest.mark.parametrize("transport", ["thread", "process", "remote"])
 @pytest.mark.parametrize("backend", ["scalar", "jax", "pallas"])
 @pytest.mark.parametrize("num_shards", [1, 2, 4])
 def test_cluster_matches_monolith(corpus, expected, num_shards, backend,
@@ -130,12 +135,13 @@ def test_cluster_matches_monolith(corpus, expected, num_shards, backend,
     The jax drain covers the full query set; the scalar and (interpret-mode)
     pallas drains cover a representative subset to bound suite runtime.  The
     process transport runs the same full query set through per-shard
-    subprocesses over a published artifact — results must be byte-identical
-    to the thread transport and the monolith."""
-    if transport == "process" and backend != "jax":
+    subprocesses over a published artifact; the remote transport runs it
+    through standalone shard servers on localhost sockets — results must be
+    byte-identical to the thread transport and the monolith."""
+    if transport in ("process", "remote") and backend != "jax":
         pytest.skip(
-            "process-transport equivalence runs on the default jax drain; "
-            "the scalar/pallas drains are covered by the thread rows"
+            f"{transport}-transport equivalence runs on the default jax "
+            "drain; the scalar/pallas drains are covered by the thread rows"
         )
     queries = ALL_QUERIES if backend == "jax" else ALL_QUERIES[:4] + ALL_QUERIES[9:]
     idx = [ALL_QUERIES.index(q) for q in queries]
@@ -639,3 +645,130 @@ def test_reload_shard_bad_artifact_raises_and_keeps_serving(corpus, expected):
         np.testing.assert_array_equal(
             svc.query(ALL_QUERIES[0], "slca"), expected[(0, "slca")]
         )
+
+
+# --------------------------------------------------------------------------- #
+# Remote transport (standalone shard servers over localhost sockets)
+# --------------------------------------------------------------------------- #
+
+
+def test_remote_kill_server_fails_typed_no_hang(corpus):
+    """Acceptance: a killed shard server surfaces as the typed WorkerDied
+    with every in-flight future failed — bounded waits throughout, no
+    hangs.  The parked server batch window guarantees the submits are in
+    flight when the kill lands."""
+    q1, q2 = ALL_QUERIES[0], ALL_QUERIES[3]  # distinct: two live gathers
+    with ClusterService.from_tree(
+        corpus, 1, transport="remote", batch_window_ms=60_000.0
+    ) as svc:
+        futs = [svc.submit(q1, "slca"), svc.submit(q2, "slca")]
+        svc._owned_servers[0].kill()
+        for fut in futs:
+            with pytest.raises(WorkerDied):
+                fut.result(timeout=120)
+        # death is sticky once the reconnect budget burns out against the
+        # dead endpoint: submits keep failing typed, never hanging
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            try:
+                svc.submit(q1, "slca").result(timeout=60)
+            except WorkerDied:
+                break
+            except Exception:
+                time.sleep(0.2)  # a reconnect attempt raced us; retry
+        else:
+            pytest.fail("submits after server death never surfaced WorkerDied")
+
+
+def test_remote_mixed_locality_matches_and_rolls(tmp_path, corpus, expected):
+    """One shard behind a TCP server, one local (endpoint=None → the pool
+    prefers a process worker): results stay byte-identical, the manifest
+    carries the endpoints, and rolling_publish drives the remote shard
+    through the server's reload op with endpoints preserved."""
+    from repro.cluster import set_cluster_endpoints
+    from repro.cluster.workers.server import launch_server
+
+    path = str(tmp_path / "cluster")
+    m = build_cluster(corpus, 2, path)
+    assert [s["endpoint"] for s in m["shards"]] == [None, None]
+    proc, ep = launch_server(
+        os.path.join(path, m["shards"][0]["dir"]), shard=0, batch_window_ms=1.0
+    )
+    try:
+        set_cluster_endpoints(path, [ep, None])
+        # endpoints read from the manifest — no endpoints kwarg needed
+        with ClusterService.from_dir(
+            path, transport="remote", batch_window_ms=1.0
+        ) as svc:
+            assert svc.pool.locality == ["remote", "process"]
+            assert svc.stats().data["worker_locality"] == ["remote", "process"]
+            for i in (0, 3):
+                np.testing.assert_array_equal(
+                    svc.query(ALL_QUERIES[i], "slca"), expected[(i, "slca")]
+                )
+            m2 = rolling_publish(path, corpus, service=svc)
+            assert [s["generation"] for s in m2["shards"]] == [1, 1]
+            assert [s["endpoint"] for s in m2["shards"]] == [ep, None]
+            assert svc.stats().summary()["reloads"] == 2
+            for i in (0, 3):
+                np.testing.assert_array_equal(
+                    svc.query(ALL_QUERIES[i], "slca"), expected[(i, "slca")]
+                )
+    finally:
+        proc.kill()
+        proc.wait(10)
+
+
+# --------------------------------------------------------------------------- #
+# Manifest migration (old artifacts load after format bumps)
+# --------------------------------------------------------------------------- #
+
+
+def test_migrate_cluster_upgrades_old_manifest(tmp_path, corpus, expected):
+    """A v1 manifest (no generations, no endpoints) is rejected with a
+    pointer at the migrator, upgrades in place through every version step,
+    and then serves — no rebuild demanded."""
+    from repro.cluster import migrate_cluster
+
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    mpath = os.path.join(path, "cluster.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    for s in manifest["shards"]:  # regress the manifest to v1
+        del s["generation"]
+        del s["endpoint"]
+    manifest["cluster_format_version"] = 1
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+    with pytest.raises(ValueError, match=r"repro\.core\.io\.migrate_cluster"):
+        ClusterService.from_dir(path)
+    m = migrate_cluster(path)
+    assert [s["generation"] for s in m["shards"]] == [0, 0]
+    assert [s["endpoint"] for s in m["shards"]] == [None, None]
+    assert migrate_cluster(path) == m  # already current: no-op
+    with ClusterService.from_dir(path, batch_window_ms=1.0) as svc:
+        np.testing.assert_array_equal(
+            svc.query(ALL_QUERIES[0], "slca"), expected[(0, "slca")]
+        )
+
+
+def test_migrate_cluster_rejects_unknown_version(tmp_path, corpus):
+    from repro.cluster import migrate_cluster
+
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    mpath = os.path.join(path, "cluster.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["cluster_format_version"] = 999  # the future is not migratable
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="cannot migrate"):
+        migrate_cluster(path)
+    # and the loader's rejection must NOT point at the migrator (it cannot
+    # help with a newer-format artifact)
+    with pytest.raises(ValueError, match="cluster_format_version") as ei:
+        ClusterService.from_dir(path)
+    assert "repro.core.io.migrate_cluster" not in str(ei.value)

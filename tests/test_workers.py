@@ -1,11 +1,18 @@
-"""Worker-layer unit tests: pipe RPC framing, the ProcessWorker lifecycle
-(ready → serve → drain → close), typed WorkerDied on kill (no hangs), and
-pool supervision (bounded respawn through the router's gather path).
+"""Worker-layer unit tests: frame protocol (round-trips plus the
+fuzz/negative matrix — truncations at every byte boundary, oversized and
+negative lengths, non-JSON headers, lying payload lengths), the
+ProcessWorker and RemoteWorker lifecycles (ready → serve → drain → close),
+typed WorkerDied on kill/corruption (no hangs), and pool supervision
+(bounded respawn through the router's gather path).
 
 Transport *equivalence* on full query matrices lives in test_cluster.py;
 this file exercises the seam itself.
 """
 import io
+import json
+import socket
+import struct
+import threading
 import time
 
 import numpy as np
@@ -13,13 +20,21 @@ import pytest
 
 from repro.cluster import ClusterService, WorkerDied
 from repro.cluster.partition import split_doc_ranges
-from repro.cluster.workers import ProcessWorker, ThreadWorker, shard_doc_stats
+from repro.cluster.workers import (
+    ProcessWorker,
+    RemoteWorker,
+    ThreadWorker,
+    shard_doc_stats,
+)
 from repro.cluster.workers.proto import (
+    MAX_FRAME_BYTES,
+    ProtocolError,
     dump_array,
     load_array,
     read_frame,
     write_frame,
 )
+from repro.cluster.workers.server import launch_server
 from repro.core import KeywordSearchEngine
 from repro.data import QUERIES, generate_discogs_tree
 
@@ -84,6 +99,71 @@ def test_proto_numpy_scalars_in_header():
     buf.seek(0)
     h, _ = read_frame(buf)
     assert h["full"] == 7 and abs(h["rate"] - 0.5) < 1e-6
+
+
+def test_proto_truncated_at_every_boundary():
+    """Any strict prefix of a valid frame reads as clean EOF — inside the
+    length prefix, inside the header JSON, inside the payload — never an
+    exception and never a partial header."""
+    buf = io.BytesIO()
+    write_frame(buf, {"id": 9, "op": "submit", "ok": True},
+                dump_array(np.arange(5, dtype=np.int64)))
+    raw = buf.getvalue()
+    for cut in range(len(raw)):
+        h, p = read_frame(io.BytesIO(raw[:cut]))
+        assert h is None and p == b"", f"cut at byte {cut}"
+    h, p = read_frame(io.BytesIO(raw))  # the whole frame still parses
+    assert h["id"] == 9 and len(p) == h["payload_len"]
+
+
+def test_proto_oversized_header_len_raises():
+    """A corrupt/hostile length prefix must raise typed, not allocate GBs."""
+    for n in (MAX_FRAME_BYTES + 1, 0xFFFFFFFF):
+        raw = struct.pack(">I", n) + b"garbage-after-a-corrupt-length"
+        with pytest.raises(ProtocolError):
+            read_frame(io.BytesIO(raw))
+
+
+def test_proto_bad_payload_len_raises():
+    for n in (MAX_FRAME_BYTES + 1, -1):
+        hdr = json.dumps({"id": 0, "op": "x", "payload_len": n}).encode()
+        raw = struct.pack(">I", len(hdr)) + hdr
+        with pytest.raises(ProtocolError):
+            read_frame(io.BytesIO(raw))
+
+
+def test_proto_non_json_header_raises():
+    # not JSON at all, and JSON that is not an object
+    for hdr in (b"ab{cd", b'[1, 2]', b'"str"'):
+        raw = struct.pack(">I", len(hdr)) + hdr
+        with pytest.raises(ProtocolError):
+            read_frame(io.BytesIO(raw))
+
+
+def test_proto_payload_len_lies_about_npy():
+    """A payload_len that undercuts the npy stream parses as a frame but
+    fails array decode — a per-request error, not a link death."""
+    payload = dump_array(np.arange(100, dtype=np.int64))
+    hdr = json.dumps(
+        {"id": 0, "op": "submit", "ok": True, "payload_len": 8}
+    ).encode()
+    raw = struct.pack(">I", len(hdr)) + hdr + payload
+    h, p = read_frame(io.BytesIO(raw))
+    assert h["payload_len"] == 8 and len(p) == 8
+    with pytest.raises(ValueError):
+        load_array(p)
+
+
+def test_proto_write_side_cap(monkeypatch):
+    """An oversized payload is rejected before any byte hits the stream, so
+    the sender fails its own request instead of desynchronizing the link."""
+    from repro.cluster.workers import proto
+
+    monkeypatch.setattr(proto, "MAX_FRAME_BYTES", 64)
+    buf = io.BytesIO()
+    with pytest.raises(ProtocolError):
+        proto.write_frame(buf, {"id": 0, "op": "x"}, b"x" * 65)
+    assert buf.getvalue() == b""
 
 
 # --------------------------------------------------------------------------- #
@@ -164,6 +244,87 @@ def test_pool_respawns_killed_worker(corpus, engine):
         snap = svc.stats().summary()
         assert snap["worker_respawns"] == 1
         assert snap["queue_depth_per_shard"] == [0]
+
+
+# --------------------------------------------------------------------------- #
+# RemoteWorker lifecycle (against a live localhost shard server)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def shard_server(artifact):
+    """One standalone shard server over the module artifact."""
+    proc, endpoint = launch_server(artifact, shard=0, batch_window_ms=1.0)
+    yield endpoint
+    proc.kill()
+    proc.wait(10)
+
+
+def test_remote_worker_serves_and_matches_thread(
+    corpus, engine, shard_server, spec
+):
+    tw = ThreadWorker(spec, engine, batch_window_ms=1.0)
+    rw = RemoteWorker(spec, shard_server)
+    try:
+        assert rw.wait_ready(60.0) and rw.pid is not None
+        for _name, kws in list(QUERIES.values())[:3]:
+            for sem in ("slca", "elca"):
+                a = tw.submit(kws, sem).result(timeout=120)
+                b = rw.submit(kws, sem).result(timeout=120)
+                np.testing.assert_array_equal(a, b, err_msg=f"{kws} {sem}")
+        kw_ids = [corpus.vocab.get(w) for w in QUERIES["Q4"][1]]
+        dk_t, full_t = tw.doc_stats(kw_ids).result(timeout=30)
+        dk_r, full_r = rw.doc_stats(kw_ids).result(timeout=30)
+        np.testing.assert_array_equal(dk_t, dk_r)
+        assert full_t == full_r
+        assert rw.stats().data["queries"] >= 6  # the server's service counts
+        # drain is client-side (flush our in-flight); stays answerable
+        rw.drain()
+        np.testing.assert_array_equal(dk_r, rw.doc_stats(kw_ids).result(30)[0])
+    finally:
+        tw.close()
+        rw.close()
+        rw.close()  # idempotent
+    # closing one connection must NOT take the server down (other routers
+    # may hold sockets to it): a fresh connection serves immediately
+    rw2 = RemoteWorker(spec, shard_server)
+    try:
+        assert rw2.wait_ready(60.0)
+        res = rw2.submit(QUERIES["Q1"][1], "slca").result(timeout=120)
+        assert res is not None
+    finally:
+        rw2.close()
+
+
+def test_remote_connect_refused_raises_workerdied(spec):
+    # port 1 is never listening on localhost: constructor fails typed
+    with pytest.raises(WorkerDied):
+        RemoteWorker(spec, "127.0.0.1:1", connect_timeout=5.0)
+
+
+def test_remote_corrupt_stream_dies_typed(spec):
+    """A peer speaking garbage framing (here: a 4 GB length prefix) kills
+    the link with a typed WorkerDied carrying the ProtocolError — it never
+    attempts the allocation and never hangs."""
+    srv = socket.create_server(("127.0.0.1", 0))
+    port = srv.getsockname()[1]
+
+    def bad_server():
+        conn, _ = srv.accept()
+        conn.sendall(struct.pack(">I", 0xFFFFFFFF) + b"junk")
+        conn.close()
+
+    threading.Thread(target=bad_server, daemon=True).start()
+    rw = RemoteWorker(spec, f"127.0.0.1:{port}")
+    try:
+        assert not rw.wait_ready(30.0)  # dead, not timed out
+        assert isinstance(rw._dead, WorkerDied)
+        assert "ProtocolError" in rw._dead.detail
+        with pytest.raises(WorkerDied):
+            rw.submit(QUERIES["Q1"][1], "slca")
+    finally:
+        rw.close()
+        srv.close()
 
 
 # --------------------------------------------------------------------------- #
