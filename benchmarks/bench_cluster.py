@@ -29,14 +29,29 @@ the same number of *distinct* queries (no repetition, so no coalescing win)
 dependent.  The `admission` row drives the burst into a deliberately tiny
 per-shard queue and reports typed sheds (Overloaded) instead of collapse.
 
+The ``open_*`` rows switch to an *open-loop* arrival process: requests
+arrive on a wall-clock schedule regardless of completions (closed-loop
+driving hides queueing collapse — a slow server slows the arrival rate).
+Shapes: steady Zipf, the same aggregate rate compressed into synchronized
+bursts, an adversarial all-unique stream (defeats coalescing *and* any
+result cache), and — on a replicated process fleet — one SIGSTOPped
+replica with hedging on vs off (the tail either stays near the hedge
+delay or inherits the full stall).  Reported: offered rate, completion
+p50/p99, and typed sheds.
+
 Env knobs: BENCH_CLUSTER_RELEASES (default max(BENCH_RELEASES, 1440): the
 corpus must be large enough that sharding is meaningful), BENCH_CLUSTER_SHARDS
-(default 4), BENCH_CLUSTER_QUERIES (burst size, default 240).
+(default 4), BENCH_CLUSTER_QUERIES (burst size, default 240),
+BENCH_CLUSTER_RATE_QPS (open-loop offered rate, default 400; stall rows
+run at a quarter of it), BENCH_CLUSTER_OPEN_N (open-loop arrivals,
+default 480).
 """
 from __future__ import annotations
 
 import os
+import signal
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -52,6 +67,12 @@ N = int(os.environ.get("BENCH_CLUSTER_RELEASES", "0")) or max(N_RELEASES, 1440)
 SHARDS = int(os.environ.get("BENCH_CLUSTER_SHARDS", "4"))
 BURST = int(os.environ.get("BENCH_CLUSTER_QUERIES", "240"))
 SMOKE = os.environ.get("BENCH_SERVICE_SMOKE", "") == "1"
+RATE = float(os.environ.get("BENCH_CLUSTER_RATE_QPS", "0")) or (
+    120.0 if SMOKE else 400.0
+)
+OPEN_N = int(os.environ.get("BENCH_CLUSTER_OPEN_N", "0")) or (
+    160 if SMOKE else 480
+)
 
 
 def zipf_workload(rng: np.random.Generator, n: int) -> list[list[str]]:
@@ -84,6 +105,75 @@ def _bench(svc, work, timed_reps: int) -> float:
     return reps[len(reps) // 2]
 
 
+def unique_workload(n: int) -> list[list[str]]:
+    """All-distinct arrivals: no two coalesce, no result cache helps."""
+    heads = [kws for _, kws in QUERIES.values()]
+    return [
+        [f"img-{i % N}.jpg", *heads[(i // max(N, 1)) % len(heads)]]
+        for i in range(n)
+    ]
+
+
+def _open_loop(svc, work, rate_qps, arrival=None, timeout=600.0):
+    """Open-loop driver: submit on the arrival schedule, measure each
+    request's completion latency via its done callback (drain order must
+    not pollute the percentiles), count typed sheds."""
+    lat: list[float] = []
+    lock = threading.Lock()
+    all_done = threading.Event()
+    pend, shed = [], 0
+    remaining = [0]
+
+    def _mark(ts):
+        def done(_f):
+            with lock:
+                lat.append((time.perf_counter() - ts) * 1e3)
+                remaining[0] -= 1
+                if remaining[0] == 0 and all_done.is_set() is False and sealed[0]:
+                    all_done.set()
+        return done
+
+    sealed = [False]
+    t0 = time.perf_counter()
+    for i, q in enumerate(work):
+        target = t0 + (arrival(i) if arrival else i / rate_qps)
+        delay = target - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        ts = time.perf_counter()
+        try:
+            fut = svc.submit(q, "slca")
+        except Overloaded:
+            shed += 1
+            continue
+        with lock:
+            remaining[0] += 1
+        fut.add_done_callback(_mark(ts))
+        pend.append(fut)
+    with lock:
+        sealed[0] = True
+        if remaining[0] == 0:
+            all_done.set()
+    for f in pend:
+        f.result(timeout=timeout)
+    all_done.wait(timeout)
+    arr = np.asarray(lat) if lat else np.zeros(1)
+    return {
+        "shed": shed,
+        "p50": float(np.percentile(arr, 50)),
+        "p99": float(np.percentile(arr, 99)),
+    }
+
+
+def _open_row(name, transport, svc, work, rate, arrival=None):
+    r = _open_loop(svc, work, rate, arrival=arrival)
+    print(
+        f"{name},{transport},{rate:.0f},{r['p50']:.2f},{r['p99']:.2f},"
+        f"0.00,0.00,{r['shed']}"
+    )
+    return r
+
+
 def _cluster_row(art, transport, name, work, baseline, timed, rate_from=None,
                  **svc_kw):
     with ClusterService.from_dir(
@@ -97,7 +187,7 @@ def _cluster_row(art, transport, name, work, baseline, timed, rate_from=None,
         )
         print(
             f"cluster{svc.num_shards}_{name},{transport},{qps:.0f},"
-            f"{s['p50_ms']},{s['p99_ms']},{rate:.2f},{qps / baseline:.2f}"
+            f"{s['p50_ms']},{s['p99_ms']},{rate:.2f},{qps / baseline:.2f},0"
         )
 
 
@@ -106,7 +196,10 @@ def run() -> None:
     work = zipf_workload(rng, BURST)
     unique = [list(q) for q in dict.fromkeys(tuple(q) for q in work)]
     timed = 3 if SMOKE else 5
-    print("variant,transport,qps,p50_ms,p99_ms,coalesce_rate,speedup_vs_mono")
+    print(
+        "variant,transport,qps,p50_ms,p99_ms,coalesce_rate,"
+        "speedup_vs_mono,shed"
+    )
 
     tree = generate_discogs_tree(n_releases=N, seed=0)
     eng = KeywordSearchEngine(tree)
@@ -115,14 +208,14 @@ def run() -> None:
         s = svc.stats().summary()
         print(
             f"mono_zipf,inproc,{mono_zipf:.0f},{s['p50_ms']},{s['p99_ms']},"
-            "0.00,1.00"
+            "0.00,1.00,0"
         )
     with QueryService(eng, batch_window_ms=2.0) as svc:
         mono_uniq = _bench(svc, unique, timed)
         s = svc.stats().summary()
         print(
             f"mono_unique,inproc,{mono_uniq:.0f},{s['p50_ms']},{s['p99_ms']},"
-            "0.00,1.00"
+            "0.00,1.00,0"
         )
 
     with tempfile.TemporaryDirectory() as art:
@@ -176,6 +269,69 @@ def run() -> None:
                 f"# admission(max_queue=8): served={len(futs)} shed={shed} "
                 f"coalesced={s['coalesced']}"
             )
+
+        # ---------------- open-loop arrival-rate traffic ---------------- #
+        open_work = zipf_workload(rng, OPEN_N)
+        adv = unique_workload(OPEN_N)
+        b = 8 if SMOKE else 32  # burst group size (aggregate rate unchanged)
+        with ClusterService.from_dir(
+            art, batch_window_ms=2.0, max_queue_per_shard=4096
+        ) as svc:
+            _drive(svc, open_work[: len(open_work) // 2])  # warm plans
+            _open_row("open_zipf", "thread", svc, open_work, RATE)
+            _open_row(
+                "open_burst", "thread", svc, open_work, RATE,
+                arrival=lambda i: (i // b) * (b / RATE),
+            )
+            _open_row("open_unique", "thread", svc, adv, RATE)
+
+    # one stalled replica: hedging keeps the tail near the hedge delay;
+    # without it the tail inherits the full stall.  One replicated process
+    # fleet serves all three rows (hedging is toggled through the sets'
+    # hedge knob — a rebuild would re-pay worker spawn).  The corpus is
+    # deliberately small: this measures the tail mechanism, not index
+    # scale, and the offered rate must sit well under fleet capacity so
+    # the tail is the stall's doing, not queueing backlog.
+    stall_rate = 25.0 if SMOKE else 50.0
+    stall_n = max(OPEN_N // 2, 40)
+    stall_tree = generate_discogs_tree(
+        n_releases=120 if SMOKE else 240, seed=1
+    )
+    stall_work = [
+        [kws for _, kws in QUERIES.values()][i % len(QUERIES)]
+        for i in range(stall_n)
+    ]
+    with tempfile.TemporaryDirectory() as art2:
+        build_cluster(stall_tree, 2, art2)
+        with ClusterService.from_dir(
+            art2, transport="process", replicas=2, hedge_ms=25.0,
+            batch_window_ms=2.0, max_queue_per_shard=4096,
+        ) as svc:
+            for _ in range(4):  # warm both replicas' plan caches
+                _drive(svc, [kws for _, kws in QUERIES.values()])
+            _open_row(
+                "open_repl_healthy", "process", svc, stall_work, stall_rate
+            )
+            pid = svc.pool.workers[0].replicas[0]._proc.pid
+            # the stall lasts the whole arrival window; a timer lifts it
+            # just after so the no-hedge row's parked requests complete
+            # (their recorded latency = the stall they inherited)
+            stall_s = len(stall_work) / stall_rate + 0.5
+            for hedge, name in ((float("inf"), "open_stall_nohedge"),
+                                (25.0, "open_stall_hedged")):
+                for rs in svc.pool.workers:
+                    rs._hedge_ms = hedge
+                os.kill(pid, signal.SIGSTOP)
+                timer = threading.Timer(
+                    stall_s, lambda: os.kill(pid, signal.SIGCONT)
+                )
+                timer.daemon = True
+                timer.start()
+                try:
+                    _open_row(name, "process", svc, stall_work, stall_rate)
+                finally:
+                    timer.cancel()
+                    os.kill(pid, signal.SIGCONT)  # idempotent if already up
 
 
 if __name__ == "__main__":

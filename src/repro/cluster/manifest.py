@@ -123,7 +123,7 @@ def build_cluster(tree: XMLTree, num_shards: int, path: str) -> dict:
         "num_keywords": len(tree.vocab),
         "routing_file": routing_file,
         "shards": [
-            dict(spec.to_json(), dir=d, generation=0, endpoint=None)
+            dict(spec.to_json(), dir=d, generation=0, endpoint=None, replicas=[])
             for spec, d in zip(specs, shard_dirs)
         ],
     }
@@ -159,24 +159,39 @@ def load_cluster_layout(
     return manifest, routing, entries
 
 
-def manifest_endpoints(manifest: dict) -> list[str | None]:
+def manifest_endpoints(manifest: dict) -> list[str | list[str] | None]:
     """Per-shard remote endpoints from a cluster manifest (None = local).
 
     Every v3+ manifest carries an ``endpoint`` per shard entry —
     ``"host:port"`` of a standalone shard server
     (:mod:`repro.cluster.workers.server`), or null for a shard served from
-    its local artifact dir.
+    its local artifact dir.  v4 adds ``replicas``: extra read-replica
+    endpoints for the same shard.  A shard with replicas yields the full
+    list (primary first) — exactly the per-shard shape
+    :class:`~repro.cluster.workers.pool.RemotePool` accepts.
     """
-    return [obj.get("endpoint") for obj in manifest["shards"]]
+    out: list[str | list[str] | None] = []
+    for obj in manifest["shards"]:
+        primary = obj.get("endpoint")
+        extras = [ep for ep in obj.get("replicas", []) if ep]
+        if extras:
+            out.append(([primary] if primary else []) + extras)
+        else:
+            out.append(primary)
+    return out
 
 
-def set_cluster_endpoints(path: str, endpoints: list[str | None]) -> dict:
-    """Record where each shard's server lives, committing the manifest.
+def set_cluster_endpoints(
+    path: str, endpoints: list[str | list[str] | None]
+) -> dict:
+    """Record where each shard's server(s) live, committing the manifest.
 
-    ``endpoints[i]`` is ``"host:port"`` or None (serve shard ``i`` locally).
-    This is deployment metadata, not content: generations, dirs, and the
-    routing file are untouched, so it composes with a live
-    ``rolling_publish``.  Returns the committed manifest.
+    ``endpoints[i]`` is ``"host:port"``, a list of them (first is the
+    primary, the rest become the shard's read ``replicas``), or None
+    (serve shard ``i`` locally).  This is deployment metadata, not
+    content: generations, dirs, and the routing file are untouched, so it
+    composes with a live ``rolling_publish``.  Returns the committed
+    manifest.
     """
     manifest = index_io.load_cluster_manifest(path)
     if len(endpoints) != len(manifest["shards"]):
@@ -184,7 +199,12 @@ def set_cluster_endpoints(path: str, endpoints: list[str | None]) -> dict:
             f"{len(manifest['shards'])} shards but {len(endpoints)} endpoints"
         )
     for obj, ep in zip(manifest["shards"], endpoints):
-        obj["endpoint"] = ep
+        if ep is None or isinstance(ep, str):
+            obj["endpoint"], obj["replicas"] = ep, []
+        else:
+            eps = [str(x) for x in ep]
+            obj["endpoint"] = eps[0] if eps else None
+            obj["replicas"] = eps[1:]
     index_io.save_cluster_manifest(path, manifest)
     return manifest
 

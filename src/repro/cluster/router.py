@@ -63,6 +63,7 @@ from concurrent.futures import Future, InvalidStateError, ThreadPoolExecutor
 
 import numpy as np
 
+from repro.api import Query, QueryResult, chain_future, validate_semantics
 from repro.core.engine import QueryStats
 from repro.core.xml_tree import XMLTree
 
@@ -128,9 +129,18 @@ class ClusterService:
         *,
         max_queue_per_shard: int = 256,
         op_timeout: float | None = DEFAULT_QUERY_TIMEOUT,
+        generations: list[int] | None = None,
     ):
         self.routing = routing
         self.pool = pool
+        # per-shard serving generation: seeded from the manifest (from_dir)
+        # or zeros, bumped by reload_shard — the cache-coherence signal the
+        # gateway's edge cache keys invalidation on
+        self.generations = (
+            list(generations)
+            if generations is not None
+            else [0] * len(pool.workers)
+        )
         # per-op deadline for the blocking waits this service performs on
         # behalf of callers (query/map results, the ELCA doc_stats gather):
         # a shard that stops answering mid-gather fails typed
@@ -199,7 +209,7 @@ class ClusterService:
         worker over its artifact dir.
         """
         if transport == "thread":
-            shards, routing, _ = load_cluster(path, mmap=mmap)
+            shards, routing, manifest = load_cluster(path, mmap=mmap)
             pool: WorkerPool = ThreadPool(
                 shards,
                 backends=backends,
@@ -208,7 +218,7 @@ class ClusterService:
                 **pool_kw,
             )
         elif transport == "process":
-            _, routing, entries = load_cluster_layout(path, mmap=mmap)
+            manifest, routing, entries = load_cluster_layout(path, mmap=mmap)
             pool = ProcessPool(
                 entries,
                 backends=backends,
@@ -241,6 +251,9 @@ class ClusterService:
             routing,
             max_queue_per_shard=max_queue_per_shard,
             op_timeout=op_timeout,
+            generations=[
+                int(s.get("generation", 0)) for s in manifest["shards"]
+            ],
         )
 
     @classmethod
@@ -274,16 +287,28 @@ class ClusterService:
         if transport == "remote":
             from .workers.server import launch_cluster_servers
 
+            replicas = max(int(kw.pop("replicas", 1)), 1)
             workdir = tempfile.mkdtemp(prefix="cluster-remote-")
             procs: list[subprocess.Popen] = []
             try:
                 manifest = build_cluster(tree, num_shards, workdir)
-                procs, eps = launch_cluster_servers(
-                    workdir,
-                    manifest,
-                    backends=kw.get("backends", "jax"),
-                    max_batch=kw.get("max_batch", 64),
-                    batch_window_ms=kw.get("batch_window_ms", 2.0),
+                # one full server set per replica rank, all over the same
+                # published artifacts; shard i's endpoints are column i
+                rounds = []
+                for _ in range(replicas):
+                    procs_r, eps_r = launch_cluster_servers(
+                        workdir,
+                        manifest,
+                        backends=kw.get("backends", "jax"),
+                        max_batch=kw.get("max_batch", 64),
+                        batch_window_ms=kw.get("batch_window_ms", 2.0),
+                    )
+                    procs.extend(procs_r)
+                    rounds.append(eps_r)
+                eps = (
+                    rounds[0]
+                    if replicas == 1
+                    else [list(col) for col in zip(*rounds)]
                 )
                 svc = cls.from_dir(
                     workdir, transport="remote", endpoints=eps, **kw
@@ -317,6 +342,27 @@ class ClusterService:
     def workers(self) -> list[Worker]:
         return self.pool.workers
 
+    def generation_vector(self) -> tuple[int, ...]:
+        """Per-shard serving generations (the edge cache's coherence stamp)."""
+        with self._lock:
+            return tuple(self.generations)
+
+    def touched(self, keywords: list[str] | str) -> tuple[int, ...]:
+        """Shards whose generation can affect this query's result.
+
+        The fanout shards for a resolvable query; conservatively *every*
+        shard for unknown keywords or an empty fanout — those results are
+        statements about the whole routing table (root-only answers), so
+        any republish must invalidate them.
+        """
+        routing = self.routing
+        kw_ids = routing.kw_ids(keywords)
+        if not kw_ids or any(k < 0 for k in kw_ids):
+            return tuple(range(self.num_shards))
+        mask = routing.fanout(kw_ids)
+        shards = tuple(s for s in range(self.num_shards) if mask >> s & 1)
+        return shards if shards else tuple(range(self.num_shards))
+
     # ------------------------------------------------------------------ #
     # Admission + scatter
     # ------------------------------------------------------------------ #
@@ -333,9 +379,15 @@ class ClusterService:
         never shed, and take no extra admission slots.  Exactness is free:
         the index is immutable while served, so equal queries have equal
         results.
+
+        Pass a :class:`repro.api.Query` for a ``Future[QueryResult]`` (ids
+        + per-request stats + the serving generation vector); the legacy
+        ``(keywords, semantics)`` form is deprecated and resolves to the
+        bare ndarray.
         """
-        if semantics not in ("slca", "elca"):
-            raise ValueError(f"semantics must be slca|elca, got {semantics!r}")
+        if isinstance(keywords, Query):
+            return self._submit_query(keywords)
+        validate_semantics(semantics)
         if isinstance(keywords, str):
             keywords = keywords.split()
         fut: Future = Future()
@@ -401,15 +453,48 @@ class ClusterService:
             )
         return fut
 
+    def _submit_query(self, q: Query) -> Future:
+        """Unified-API admission: ``Future[QueryResult]``."""
+        q.validate()
+        if q.index != "dag":
+            raise ValueError(
+                f"index must be dag for ClusterService, got {q.index!r}"
+            )
+        if q.backend is not None:
+            want = {"xla": "jax"}.get(q.backend, q.backend)
+            have = {
+                {"xla": "jax"}.get(b, b)
+                for b in getattr(self.pool, "_backends", [want])
+            }
+            if have != {want}:
+                raise ValueError(
+                    f"backend mismatch: this cluster drains {sorted(have)}, "
+                    f"the query asked for {q.backend!r}"
+                )
+        # captured before submit: a reload that lands mid-flight makes the
+        # reported vector *older* than what served the query, which is the
+        # safe direction for cache stamping (over-invalidation, never stale)
+        gens = self.generation_vector()
+        t0 = time.perf_counter()
+
+        def finish(ids: np.ndarray) -> QueryResult:
+            lat = round((time.perf_counter() - t0) * 1e3, 3)
+            return QueryResult(
+                ids=ids, stats={"latency_ms": lat}, generations=gens
+            )
+
+        return chain_future(self.submit(list(q.keywords), q.semantics), finish)
+
     def query(
         self,
-        keywords: list[str] | str,
+        keywords: list[str] | str | Query,
         semantics: str = "slca",
         timeout: float | None = None,
-    ) -> np.ndarray:
+    ) -> np.ndarray | QueryResult:
         """Blocking submit; waits at most ``timeout`` (default: the
         service's ``op_timeout``) and raises ``TimeoutError`` typed rather
-        than hanging on a shard that stopped answering."""
+        than hanging on a shard that stopped answering.  A
+        :class:`repro.api.Query` yields a ``QueryResult``."""
         return self.submit(keywords, semantics).result(
             self.op_timeout if timeout is None else timeout
         )
@@ -571,6 +656,7 @@ class ClusterService:
             else:
                 old = self.pool.install(i, new)
                 self._stats.data["reloads"] += 1
+                self.generations[i] += 1  # coherence signal for edge caches
                 if self._refs.get(old, 0) > 0:
                     self._retired.add(old)  # closed by its last gather
                     closing = None
@@ -593,6 +679,7 @@ class ClusterService:
         snap.data["transport"] = self.pool.transport
         snap.data["worker_locality"] = self.pool.locality
         snap.data["worker_respawns"] = getattr(self.pool, "respawns", 0)
+        snap.data["generations"] = list(self.generation_vector())
         snap.data.update(self.admission.snapshot())
         # QueryStats.merge sums the shard counters and recomputes the plan
         # hit rate from the merged hits/launches.  Collection fans out so a
@@ -613,6 +700,11 @@ class ClusterService:
                 "plan_hit_rate": agg.data.get("plan_hit_rate", 0.0),
             }
         )
+        # replica-tier health (present only when shards are ReplicaSets)
+        for key in ("replicas", "replicas_live", "hedges_fired", "hedge_wins",
+                    "failovers", "replica_deaths", "replica_respawns"):
+            if key in agg.data:
+                snap.data[key] = agg.data[key]
         return snap
 
     def close(self, timeout: float = 30.0) -> None:

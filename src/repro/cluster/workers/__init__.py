@@ -17,6 +17,7 @@ from .pool import ProcessPool, RemotePool, SupervisedPool, ThreadPool, WorkerPoo
 from .process import ProcessWorker
 from .proto import MAX_FRAME_BYTES, ProtocolError
 from .remote import RemoteWorker
+from .replica import ReplicaSet
 from .thread import ThreadWorker
 
 __all__ = [
@@ -26,6 +27,7 @@ __all__ = [
     "ProtocolError",
     "RemotePool",
     "RemoteWorker",
+    "ReplicaSet",
     "RpcWorker",
     "SupervisedPool",
     "ThreadPool",

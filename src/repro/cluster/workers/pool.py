@@ -32,6 +32,7 @@ from ..partition import ShardSpec
 from .base import DEFAULT_OP_TIMEOUT, Worker, WorkerDied
 from .process import ProcessWorker
 from .remote import RemoteWorker
+from .replica import ReplicaSet
 from .thread import ThreadWorker
 
 
@@ -184,7 +185,16 @@ class SupervisedPool(WorkerPool):
 
 
 class ProcessPool(SupervisedPool):
-    """Per-shard subprocesses over mmap'd artifact dirs, supervised."""
+    """Per-shard subprocesses over mmap'd artifact dirs, supervised.
+
+    ``replicas=N`` (N > 1) runs each shard as a
+    :class:`~repro.cluster.workers.replica.ReplicaSet` of N subprocesses
+    over the *same* mmap'd artifact (index pages shared through the page
+    cache) — the socket-free way to get hedged dispatch and kill-tolerant
+    failover, used by the tests and the open-loop benchmark.  Replica
+    supervision then lives inside the set; the pool supervises only
+    unreplicated shards.
+    """
 
     transport = "process"
 
@@ -198,15 +208,21 @@ class ProcessPool(SupervisedPool):
         max_respawns: int = 3,
         spawn_timeout: float = 300.0,
         op_timeout: float = DEFAULT_OP_TIMEOUT,
+        replicas: int = 1,
+        hedge_ms: float | None = None,
     ):
         super().__init__(
             len(shards), max_respawns=max_respawns, spawn_timeout=spawn_timeout
         )
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
         backends = _per_shard(backends, len(shards))
         self._backends = backends
         self._max_batch = max_batch
         self._batch_window_ms = batch_window_ms
         self._op_timeout = float(op_timeout)
+        self._replicas = int(replicas)
+        self._hedge_ms = hedge_ms
         # spawn everything first (children load their artifacts in
         # parallel), then wait for readiness
         self.workers = [
@@ -220,8 +236,8 @@ class ProcessPool(SupervisedPool):
             self.close(timeout=5.0)
             raise
 
-    def _spawn_worker(
-        self, spec: ShardSpec, shard_dir: str, backend: str
+    def _one_process(
+        self, spec: ShardSpec, shard_dir: str, backend: str, on_death
     ) -> ProcessWorker:
         return ProcessWorker(
             spec,
@@ -230,10 +246,30 @@ class ProcessPool(SupervisedPool):
             max_batch=self._max_batch,
             batch_window_ms=self._batch_window_ms,
             op_timeout=self._op_timeout,
-            on_death=self._on_death,
+            on_death=on_death,
         )
 
-    def spawn(self, i: int, path: str | None = None) -> ProcessWorker:
+    def _spawn_worker(
+        self, spec: ShardSpec, shard_dir: str, backend: str
+    ) -> Worker:
+        if self._replicas == 1:
+            return self._one_process(spec, shard_dir, backend, self._on_death)
+
+        def factory(slot, on_death, _spec=spec, _dir=shard_dir, _be=backend):
+            return self._one_process(_spec, _dir, _be, on_death)
+
+        rs = ReplicaSet(
+            spec,
+            factory,
+            self._replicas,
+            hedge_ms=self._hedge_ms,
+            max_respawns=self._max_respawns,
+            spawn_timeout=self._spawn_timeout,
+        )
+        rs.shard_dir = shard_dir  # reload bookkeeping, like ProcessWorker
+        return rs
+
+    def spawn(self, i: int, path: str | None = None) -> Worker:
         """Replacement worker for shard ``i`` — *verified* loadable.
 
         Blocks until the child reports ready (symmetric with
@@ -279,6 +315,12 @@ class RemotePool(SupervisedPool):
     the *server's* host) and returns a fresh connection; in-flight queries
     on the old connection finish on the old engine, exactly the process
     transport's contract.
+
+    ``endpoints[i]`` may also be a *list* of ``"host:port"`` strings: the
+    shard is then served by a :class:`ReplicaSet` over one connection per
+    endpoint — hedged dispatch, failover, and per-replica reconnect all
+    live in the set (see :mod:`~repro.cluster.workers.replica`); the
+    pool-level budget applies only to unreplicated shards.
     """
 
     transport = "remote"
@@ -287,7 +329,7 @@ class RemotePool(SupervisedPool):
         self,
         shards: list[tuple[ShardSpec, str]],  # (spec, artifact dir)
         *,
-        endpoints: list[str | None],
+        endpoints: list[str | list[str] | None],
         backends: str | list[str] = "jax",
         max_batch: int = 64,
         batch_window_ms: float = 2.0,
@@ -296,6 +338,7 @@ class RemotePool(SupervisedPool):
         connect_timeout: float = 30.0,
         op_timeout: float = DEFAULT_OP_TIMEOUT,
         reconnect_backoff: float = 0.1,
+        hedge_ms: float | None = None,
     ):
         super().__init__(
             len(shards), max_respawns=max_respawns, spawn_timeout=spawn_timeout
@@ -306,7 +349,8 @@ class RemotePool(SupervisedPool):
             )
         self._specs = [spec for spec, _ in shards]
         self._dirs = [d for _, d in shards]
-        self._endpoints = list(endpoints)
+        self._endpoints = [_norm_endpoints(e) for e in endpoints]
+        self._hedge_ms = hedge_ms
         self._backends = _per_shard(backends, len(shards))
         self._max_batch = max_batch
         self._batch_window_ms = batch_window_ms
@@ -336,19 +380,37 @@ class RemotePool(SupervisedPool):
             on_death=self._on_death,
         )
 
+    def _dial(self, i: int, endpoint: str, on_death) -> RemoteWorker:
+        return RemoteWorker(
+            self._specs[i],
+            endpoint,
+            connect_timeout=self._connect_timeout,
+            op_timeout=self._op_timeout,
+            on_death=on_death,
+        )
+
     def _build(self, i: int) -> Worker:
         """Fresh worker for shard ``i`` at its configured locality.
 
         Raises :class:`WorkerDied` when the endpoint does not answer (the
         supervisor's reconnect loop treats that as one burned attempt)."""
-        if self._endpoints[i] is None:
+        eps = self._endpoints[i]
+        if eps is None:
             return self._local_worker(i, self._dirs[i])
-        return RemoteWorker(
+        if len(eps) == 1:
+            return self._dial(i, eps[0], self._on_death)
+
+        def factory(slot, on_death, _i=i, _eps=eps):
+            return self._dial(_i, _eps[slot], on_death)
+
+        return ReplicaSet(
             self._specs[i],
-            self._endpoints[i],
-            connect_timeout=self._connect_timeout,
-            op_timeout=self._op_timeout,
-            on_death=self._on_death,
+            factory,
+            len(eps),
+            hedge_ms=self._hedge_ms,
+            max_respawns=self._max_respawns,
+            respawn_backoff=self._backoff,
+            spawn_timeout=self._spawn_timeout,
         )
 
     def spawn(self, i: int, path: str | None = None) -> Worker:
@@ -391,6 +453,16 @@ class RemotePool(SupervisedPool):
                 continue  # the per-shard budget bounds this loop
             self._install_replacement(worker, replacement)
             return
+
+
+def _norm_endpoints(e: str | list[str] | None) -> list[str] | None:
+    """One shard's endpoint config: None (local), "h:p", or a replica list."""
+    if e is None:
+        return None
+    if isinstance(e, str):
+        return [e]
+    eps = [str(x) for x in e]
+    return eps or None  # an empty replica list means "run it locally"
 
 
 def _per_shard(backends: str | list[str], n: int) -> list[str]:

@@ -16,9 +16,18 @@ memory-map from N serving processes).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.api import (
+    Query,
+    QueryResult,
+    validate_backend,
+    validate_index,
+    validate_semantics,
+)
 
 from . import io as index_io
 from . import search_base, search_vec
@@ -56,13 +65,23 @@ class QueryStats:
             return 0.0
         return float(np.percentile(np.asarray(self.latencies_ms), p))
 
-    def summary(self) -> dict:
+    def to_dict(self) -> dict:
+        """The one stats schema: counters + (when timed) latency percentiles.
+
+        Engine, service, cluster rollups, and the HTTP gateway all emit this
+        shape — same field names at every layer, so a dashboard reading the
+        gateway's ``/stats`` JSON can read a worker's local stats unchanged.
+        """
         out = dict(self.data)
         if self.latencies_ms:
             out["queries_timed"] = len(self.latencies_ms)
             out["p50_ms"] = round(self.percentile(50), 3)
             out["p99_ms"] = round(self.percentile(99), 3)
         return out
+
+    def summary(self) -> dict:
+        """Deprecated alias of :meth:`to_dict` (kept for old callers)."""
+        return self.to_dict()
 
     @classmethod
     def merge(cls, parts: list[QueryStats]) -> QueryStats:
@@ -157,19 +176,50 @@ class KeywordSearchEngine:
 
     def query(
         self,
-        keywords: list[str] | str,
+        keywords: list[str] | str | Query,
         semantics: str = "slca",
         index: str = "dag",
         backend: str = "scalar",
         algorithm: str | None = None,
+    ) -> np.ndarray | QueryResult:
+        """Run one keyword query.
+
+        Pass a :class:`repro.api.Query` to get a
+        :class:`repro.api.QueryResult` (ids + stats dict); the positional
+        string/kwargs form is the deprecated legacy surface and returns the
+        bare sorted original node ids.
+        """
+        if isinstance(keywords, Query):
+            q = keywords.validate()
+            t0 = time.perf_counter()
+            ids = self._query(
+                list(q.keywords), q.semantics, q.index, q.backend or "scalar",
+                algorithm,
+            )
+            stats = self.last_stats.to_dict()
+            stats["latency_ms"] = round((time.perf_counter() - t0) * 1e3, 3)
+            return QueryResult(ids=ids, stats=stats, generations=())
+        return self._query(keywords, semantics, index, backend, algorithm)
+
+    def _query(
+        self,
+        keywords: list[str] | str,
+        semantics: str,
+        index: str,
+        backend: str,
+        algorithm: str | None,
     ) -> np.ndarray:
-        """Run one keyword query; returns sorted original node ids."""
+        # validate *before* the unknown-keyword early return — a bogus
+        # semantics/index/backend is a caller bug and must raise even when
+        # the keywords miss the vocab (and regardless of the algorithm
+        # override on the scalar paths)
+        validate_semantics(semantics)
+        validate_index(index)
+        validate_backend(backend)
+        self.last_stats = QueryStats()
         kws = self.keyword_ids(keywords)
         if any(k < 0 for k in kws) or not kws:
             return np.zeros(0, dtype=np.int64)
-        self.last_stats = QueryStats()
-        if semantics not in ("slca", "elca"):
-            raise ValueError(f"semantics must be slca|elca, got {semantics!r}")
 
         if index == "tree":
             if backend == "scalar":
@@ -214,6 +264,7 @@ class KeywordSearchEngine:
         launch per frontier round across the whole batch)."""
         from .search_dag import dag_search_vec_multi
 
+        validate_semantics(semantics)
         if self.cluster is None:
             raise ValueError("engine was built without the DAG index")
         kws = [self.keyword_ids(q) for q in queries]

@@ -41,10 +41,12 @@ _MANIFEST = "manifest.json"
 # v2 (PR 3): every entry in ``shards`` carries a ``generation`` stamp,
 # bumped per-shard by the rolling republish path.  v3 (PR 5): every entry
 # carries an ``endpoint`` ("host:port" of a standalone shard server, or
-# null to serve the shard locally) — readers of older manifests would
-# silently miss the fields, so the version gates them out loud; see
-# :func:`migrate_cluster` for the in-place upgrade path.
-CLUSTER_FORMAT_VERSION = 3
+# null to serve the shard locally).  v4 (PR 6): every entry carries
+# ``replicas``, a list of extra read-replica endpoints the RemotePool
+# hedges across — readers of older manifests would silently miss the
+# fields, so the version gates them out loud; see :func:`migrate_cluster`
+# for the in-place upgrade path.
+CLUSTER_FORMAT_VERSION = 4
 _CLUSTER_MANIFEST = "cluster.json"
 
 
@@ -377,6 +379,8 @@ _CLUSTER_MIGRATIONS = {
     1: lambda m: [s.setdefault("generation", 0) for s in m["shards"]],
     # v2 -> v3: per-shard remote endpoints (remote transport, PR 5)
     2: lambda m: [s.setdefault("endpoint", None) for s in m["shards"]],
+    # v3 -> v4: per-shard read-replica endpoint lists (hedged dispatch, PR 6)
+    3: lambda m: [s.setdefault("replicas", []) for s in m["shards"]],
 }
 
 

@@ -1,0 +1,24 @@
+"""HTTP/JSON front door over a :class:`~repro.cluster.router.ClusterService`.
+
+    gateway = Gateway(ClusterService.from_dir(path)).start()
+    curl -s localhost:PORT/query -d '{"keywords": "vinyl reissue"}'
+
+One asyncio server thread speaks HTTP/1.1 (stdlib only — no web
+framework); every ``POST /query`` parses into a
+:class:`repro.api.Query`, runs through the cluster's scatter-gather, and
+returns the :class:`repro.api.QueryResult` JSON shape: result ids, the
+per-request stats dict, and the serving generation vector.  A
+generation-stamped edge cache (:class:`~repro.gateway.cache.EdgeCache`)
+short-circuits repeated queries and self-invalidates when a
+``rolling_publish`` bumps any touched shard's generation.
+
+See :mod:`repro.gateway.http` for the server, :mod:`repro.gateway.cache`
+for the cache, and :mod:`repro.gateway.server` for the CLI entrypoint
+(``python -m repro.gateway``) plus :func:`~repro.gateway.server.
+launch_gateway` for supervised local spawns.
+"""
+from .cache import EdgeCache
+from .http import Gateway
+from .server import launch_gateway
+
+__all__ = ["EdgeCache", "Gateway", "launch_gateway"]

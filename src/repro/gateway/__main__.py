@@ -1,0 +1,6 @@
+"""``python -m repro.gateway`` — see :mod:`repro.gateway.server`."""
+import sys
+
+from .server import main
+
+sys.exit(main())

@@ -1,0 +1,325 @@
+"""The asyncio HTTP/1.1 gateway server (stdlib only, no web framework).
+
+Routes:
+
+  * ``POST /query``  — body is a :class:`repro.api.Query` JSON object
+    (``{"keywords": "vinyl reissue", "semantics": "slca"}``); the
+    response is the :class:`repro.api.QueryResult` shape plus a
+    ``cached`` flag::
+
+        {"ids": [...], "stats": {...}, "generations": [...], "cached": false}
+
+  * ``GET /stats``   — the cluster rollup in the one
+    :meth:`~repro.core.engine.QueryStats.to_dict` schema under
+    ``service``, gateway counters + cache snapshot under ``gateway``;
+  * ``GET /healthz`` — liveness + shard count + generation vector.
+
+Error mapping: bad JSON / unknown fields / bad semantics → 400 (the
+``Query.from_dict`` validation path), admission shed
+(:class:`~repro.cluster.admission.Overloaded`) → 429, a shard lost with
+every replica (:class:`~repro.cluster.workers.WorkerDied`) → 503, a
+gather deadline → 504.  With replicated shards, a single replica kill or
+stall never reaches this mapping — the
+:class:`~repro.cluster.workers.replica.ReplicaSet` hedges or fails over
+below the router.
+
+The event loop runs on one daemon thread; ``ClusterService.submit`` is
+called inline (it only routes + enqueues) and its
+``concurrent.futures.Future`` is bridged with ``asyncio.wrap_future``,
+so many HTTP requests ride the scatter-gather concurrently.  Blocking
+surfaces (``service.stats()``'s per-worker RPCs) go through the loop's
+executor.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+
+from repro.api import Query
+from repro.cluster.admission import Overloaded
+from repro.cluster.workers import WorkerDied
+
+from .cache import EdgeCache
+
+MAX_BODY_BYTES = 1 << 20  # a keyword query has no business being >1MiB
+_REASONS = {
+    200: "OK", 400: "Bad Request", 404: "Not Found",
+    405: "Method Not Allowed", 413: "Payload Too Large",
+    429: "Too Many Requests", 500: "Internal Server Error",
+    503: "Service Unavailable", 504: "Gateway Timeout",
+}
+
+
+class HttpError(Exception):
+    def __init__(self, status: int, message: str):
+        self.status = status
+        self.message = message
+        super().__init__(f"{status}: {message}")
+
+
+class Gateway:
+    """HTTP front door over one ClusterService (or anything shaped like it).
+
+    ``service`` must provide ``submit(Query) -> Future[QueryResult]``,
+    ``generation_vector()``, ``touched(keywords)``, ``stats()``, and
+    ``num_shards`` — i.e. a :class:`~repro.cluster.router.ClusterService`.
+    ``own_service=True`` makes :meth:`close` also close the service (the
+    CLI entrypoint's mode).
+    """
+
+    def __init__(
+        self,
+        service,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        cache_entries: int = 1024,
+        request_timeout: float | None = None,
+        own_service: bool = False,
+    ):
+        self.service = service
+        self.cache = EdgeCache(cache_entries)
+        self.host = host
+        self.port = int(port)  # rewritten with the bound port by start()
+        self.request_timeout = (
+            request_timeout
+            if request_timeout is not None
+            else getattr(service, "op_timeout", None)
+        )
+        self._own_service = own_service
+        self._lock = threading.Lock()
+        self.counters = {"requests": 0, "queries": 0, "errors": 0}
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._server: asyncio.AbstractServer | None = None
+        self._thread: threading.Thread | None = None
+        self._closed = False
+
+    @property
+    def endpoint(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    # ------------------------------------------------------------------ #
+    # Lifecycle
+    # ------------------------------------------------------------------ #
+    def start(self, timeout: float = 30.0) -> Gateway:
+        """Bind + serve on a daemon thread; returns once the port is bound."""
+        started = threading.Event()
+        boot_err: list[BaseException] = []
+
+        def run() -> None:
+            loop = asyncio.new_event_loop()
+            asyncio.set_event_loop(loop)
+            self._loop = loop
+
+            async def boot():
+                self._server = await asyncio.start_server(
+                    self._handle, self.host, self.port
+                )
+                self.port = self._server.sockets[0].getsockname()[1]
+
+            try:
+                loop.run_until_complete(boot())
+            except BaseException as e:
+                boot_err.append(e)
+                started.set()
+                loop.close()
+                return
+            started.set()
+            try:
+                loop.run_forever()
+            finally:
+                self._server.close()
+                loop.run_until_complete(self._server.wait_closed())
+                # keep-alive handlers still parked on a read must be
+                # cancelled and allowed to unwind, or loop.close()
+                # destroys them pending
+                tasks = [t for t in asyncio.all_tasks(loop) if not t.done()]
+                for t in tasks:
+                    t.cancel()
+                if tasks:
+                    loop.run_until_complete(
+                        asyncio.gather(*tasks, return_exceptions=True)
+                    )
+                loop.close()
+
+        self._thread = threading.Thread(
+            target=run, name="gateway-http", daemon=True
+        )
+        self._thread.start()
+        started.wait(timeout)
+        if boot_err:
+            raise boot_err[0]
+        if self._server is None:
+            raise RuntimeError(f"gateway did not bind within {timeout}s")
+        return self
+
+    def close(self, timeout: float = 10.0) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        if self._loop is not None and self._loop.is_running():
+            self._loop.call_soon_threadsafe(self._loop.stop)
+        if self._thread is not None:
+            self._thread.join(timeout)
+        if self._own_service:
+            self.service.close()
+
+    def __enter__(self) -> Gateway:
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------ #
+    # HTTP plumbing
+    # ------------------------------------------------------------------ #
+    async def _handle(self, reader, writer) -> None:
+        try:
+            while True:
+                req = await self._read_request(reader)
+                if req is None:
+                    break  # client closed between requests
+                method, path, headers, body = req
+                keep = headers.get("connection", "").lower() != "close"
+                self._count("requests")
+                try:
+                    status, obj = await self._route(method, path, body)
+                except HttpError as e:
+                    self._count("errors")
+                    status, obj = e.status, {"error": e.message}
+                except Exception as e:  # one bad request, not the server
+                    self._count("errors")
+                    status, obj = 500, {
+                        "error": str(e), "etype": type(e).__name__
+                    }
+                await self._respond(writer, status, obj, keep)
+                if not keep:
+                    break
+        except (
+            asyncio.IncompleteReadError, ConnectionError, asyncio.TimeoutError
+        ):
+            pass  # client vanished mid-request; nothing to answer
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _read_request(self, reader):
+        line = await reader.readline()
+        if not line:
+            return None
+        parts = line.decode("latin-1").strip().split()
+        if len(parts) != 3:
+            raise HttpError(400, "malformed request line")
+        method, path, _version = parts
+        headers: dict[str, str] = {}
+        while True:
+            h = await reader.readline()
+            if h in (b"\r\n", b"\n", b""):
+                break
+            name, _, value = h.decode("latin-1").partition(":")
+            headers[name.strip().lower()] = value.strip()
+        try:
+            n = int(headers.get("content-length", "0") or "0")
+        except ValueError as e:
+            raise HttpError(400, "bad Content-Length") from e
+        if n > MAX_BODY_BYTES:
+            raise HttpError(413, f"body over {MAX_BODY_BYTES} bytes")
+        body = await reader.readexactly(n) if n > 0 else b""
+        return method, path, headers, body
+
+    async def _respond(self, writer, status: int, obj: dict, keep: bool):
+        body = json.dumps(obj).encode()
+        head = (
+            f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}\r\n"
+            "Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: {'keep-alive' if keep else 'close'}\r\n"
+            "\r\n"
+        )
+        writer.write(head.encode("latin-1") + body)
+        await writer.drain()
+
+    # ------------------------------------------------------------------ #
+    # Routes
+    # ------------------------------------------------------------------ #
+    async def _route(self, method: str, path: str, body: bytes):
+        path = path.split("?", 1)[0]
+        if path == "/query":
+            if method != "POST":
+                raise HttpError(405, "POST /query")
+            return await self._query(body)
+        if path == "/stats":
+            if method != "GET":
+                raise HttpError(405, "GET /stats")
+            return await self._stats()
+        if path == "/healthz":
+            if method != "GET":
+                raise HttpError(405, "GET /healthz")
+            return 200, {
+                "ok": True,
+                "shards": self.service.num_shards,
+                "generations": list(self.service.generation_vector()),
+            }
+        raise HttpError(404, f"no route {path!r}")
+
+    async def _query(self, body: bytes):
+        try:
+            obj = json.loads(body.decode() or "null")
+        except (ValueError, UnicodeDecodeError) as e:
+            raise HttpError(400, f"invalid JSON body: {e}") from e
+        try:
+            q = Query.from_dict(obj)
+        except ValueError as e:
+            raise HttpError(400, str(e)) from e
+        self._count("queries")
+        # generation stamp BEFORE submit: a reload landing mid-flight makes
+        # the stamp conservative (entry invalidates early, never serves
+        # stale) — see cache.py
+        gens = self.service.generation_vector()
+        hit = self.cache.get(q.cache_key, gens)
+        if hit is not None:
+            return 200, dict(hit, cached=True)
+        touched = self.service.touched(list(q.keywords))
+        try:
+            fut = self.service.submit(q)
+        except Overloaded as e:
+            raise HttpError(429, str(e)) from e
+        except ValueError as e:
+            raise HttpError(400, str(e)) from e
+        try:
+            res = await asyncio.wait_for(
+                asyncio.wrap_future(fut), self.request_timeout
+            )
+        except WorkerDied as e:
+            raise HttpError(503, str(e)) from e
+        except asyncio.TimeoutError as e:
+            raise HttpError(
+                504, f"query exceeded {self.request_timeout}s"
+            ) from e
+        payload = res.to_dict()
+        self.cache.put(q.cache_key, payload, touched, gens)
+        return 200, dict(payload, cached=False)
+
+    async def _stats(self):
+        # per-worker stats collection blocks on RPC round-trips: keep the
+        # event loop free while it runs
+        snap = await asyncio.get_running_loop().run_in_executor(
+            None, self.service.stats
+        )
+        with self._lock:
+            gw = dict(self.counters)
+        gw["cache"] = self.cache.snapshot()
+        return 200, {
+            "service": snap.to_dict(),
+            "gateway": gw,
+            "generations": list(self.service.generation_vector()),
+        }
+
+    def _count(self, key: str) -> None:
+        with self._lock:
+            self.counters[key] += 1

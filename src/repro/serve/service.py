@@ -38,6 +38,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.api import Query, QueryResult, chain_future, validate_backend, validate_semantics
 from repro.core.engine import KeywordSearchEngine, QueryStats
 from repro.core.search_base import dag_search
 from repro.core.search_dag import dag_search_vec_multi
@@ -70,7 +71,8 @@ class QueryService:
     ):
         if engine.cluster is None:
             raise ValueError("QueryService needs an engine with the DAG index")
-        if backend not in _BACKENDS:
+        validate_backend(backend)
+        if backend not in _BACKENDS:  # None: a service needs a concrete drain
             raise ValueError(
                 f"backend must be one of {sorted(_BACKENDS)}, got {backend!r}"
             )
@@ -97,10 +99,18 @@ class QueryService:
     # ------------------------------------------------------------------ #
     # Admission
     # ------------------------------------------------------------------ #
-    def submit(self, keywords: list[str] | str, semantics: str = "slca") -> Future:
-        """Enqueue one query; resolves to sorted original node ids."""
-        if semantics not in ("slca", "elca"):
-            raise ValueError(f"semantics must be slca|elca, got {semantics!r}")
+    def submit(
+        self, keywords: list[str] | str | Query, semantics: str = "slca"
+    ) -> Future:
+        """Enqueue one query; the Future resolves when its window drains.
+
+        Pass a :class:`repro.api.Query` for a ``Future[QueryResult]``; the
+        legacy ``(keywords, semantics)`` form is deprecated and resolves to
+        the bare sorted original node ids.
+        """
+        if isinstance(keywords, Query):
+            return self._submit_query(keywords)
+        validate_semantics(semantics)
         fut: Future = Future()
         item = _Pending(self.engine.keyword_ids(keywords), semantics, fut)
         with self._wake:
@@ -119,8 +129,30 @@ class QueryService:
             self._wake.notify()
         return fut
 
-    def query(self, keywords: list[str] | str, semantics: str = "slca") -> np.ndarray:
-        """Synchronous convenience: submit + wait."""
+    def _submit_query(self, q: Query) -> Future:
+        """Unified-API admission: ``Future[QueryResult]``."""
+        q.validate()
+        if q.index != "dag":
+            raise ValueError(
+                f"index must be dag for QueryService, got {q.index!r}"
+            )
+        if q.backend is not None and _BACKENDS[q.backend] != _BACKENDS[self.backend]:
+            raise ValueError(
+                f"backend mismatch: this service drains {self.backend!r}, "
+                f"the query asked for {q.backend!r}"
+            )
+        t0 = time.perf_counter()
+
+        def finish(ids: np.ndarray) -> QueryResult:
+            lat = round((time.perf_counter() - t0) * 1e3, 3)
+            return QueryResult(ids=ids, stats={"latency_ms": lat}, generations=())
+
+        return chain_future(self.submit(list(q.keywords), q.semantics), finish)
+
+    def query(
+        self, keywords: list[str] | str | Query, semantics: str = "slca"
+    ) -> np.ndarray | QueryResult:
+        """Synchronous convenience: submit + wait (QueryResult for a Query)."""
         return self.submit(keywords, semantics).result()
 
     def map(

@@ -1,0 +1,287 @@
+"""The unified Query/QueryResult request surface (repro.api).
+
+Every serving layer — engine, QueryService, ClusterService — accepts a
+:class:`repro.api.Query` and returns a :class:`repro.api.QueryResult`
+whose ids are byte-identical to the layer's deprecated legacy signature.
+Also pins the validation bugfix: a bogus ``semantics``/``index``/
+``backend`` raises even when the keywords miss the vocabulary (the old
+engine returned an empty hit-list before ever looking at semantics).
+"""
+import numpy as np
+import pytest
+
+from repro.api import (
+    Query,
+    QueryResult,
+    chain_future,
+    normalize_keywords,
+    validate_backend,
+    validate_index,
+    validate_semantics,
+)
+from repro.cluster import ClusterService
+from repro.core import KeywordSearchEngine
+from repro.core.engine import QueryStats
+from repro.data import generate_discogs_tree
+from repro.serve import QueryService
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_discogs_tree(n_releases=12, seed=5)
+
+
+@pytest.fixture(scope="module")
+def engine(corpus):
+    return KeywordSearchEngine(corpus)
+
+
+# --------------------------------------------------------------------------- #
+# Query model
+# --------------------------------------------------------------------------- #
+
+
+def test_normalize_keywords():
+    assert normalize_keywords("vinyl  reissue") == ("vinyl", "reissue")
+    assert normalize_keywords(["a", "b"]) == ("a", "b")
+    assert normalize_keywords(()) == ()
+
+
+def test_query_normalizes_and_hashes():
+    a = Query("vinyl reissue")
+    b = Query(["vinyl", "reissue"])
+    assert a.keywords == ("vinyl", "reissue")
+    assert a == b and hash(a) == hash(b)
+    assert a.cache_key == (("vinyl", "reissue"), "slca", "dag")
+    # backend is not part of the logical identity
+    assert Query("x", backend="jax").cache_key == Query("x").cache_key
+
+
+def test_query_is_frozen():
+    q = Query("vinyl")
+    with pytest.raises(AttributeError):
+        q.semantics = "elca"
+
+
+@pytest.mark.parametrize(
+    "kw,msg",
+    [
+        (dict(semantics="bogus"), "semantics"),
+        (dict(index="btree"), "index"),
+        (dict(backend="cuda"), "backend"),
+    ],
+)
+def test_query_validate_rejects(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        Query.make("vinyl", **kw)
+
+
+def test_validate_helpers():
+    assert validate_semantics("elca") == "elca"
+    assert validate_index("tree") == "tree"
+    assert validate_backend(None) is None
+    assert validate_backend("pallas") == "pallas"
+    for fn, bad in (
+        (validate_semantics, "SLCA"),
+        (validate_index, "dag "),
+        (validate_backend, "gpu"),
+    ):
+        with pytest.raises(ValueError):
+            fn(bad)
+
+
+def test_query_from_dict_roundtrip():
+    q = Query.make("vinyl reissue", "elca", backend="jax")
+    assert Query.from_dict(q.to_dict()) == q
+    assert Query.from_dict({"keywords": "vinyl"}) == Query("vinyl")
+
+
+@pytest.mark.parametrize(
+    "obj,msg",
+    [
+        ([1, 2], "JSON object"),
+        ({"kw": "x"}, "unknown query fields"),
+        ({"keywords": "x", "extra": 1}, "unknown query fields"),
+        ({}, "keywords"),
+        ({"keywords": 7}, "keywords"),
+        ({"keywords": "x", "semantics": "nope"}, "semantics"),
+    ],
+)
+def test_query_from_dict_rejects(obj, msg):
+    with pytest.raises(ValueError, match=msg):
+        Query.from_dict(obj)
+
+
+def test_query_result_roundtrip():
+    res = QueryResult(
+        ids=np.array([3, 9], dtype=np.int64),
+        stats={"latency_ms": 1.5},
+        generations=(0, 2),
+    )
+    assert len(res) == 2
+    d = res.to_dict()
+    assert d == {
+        "ids": [3, 9], "stats": {"latency_ms": 1.5}, "generations": [0, 2]
+    }
+    back = QueryResult.from_dict(d)
+    np.testing.assert_array_equal(back.ids, res.ids)
+    assert back.ids.dtype == np.int64
+    assert back.generations == (0, 2)
+
+
+def test_chain_future_propagates():
+    from concurrent.futures import Future
+
+    inner: Future = Future()
+    outer = chain_future(inner, lambda v: v + 1)
+    inner.set_result(41)
+    assert outer.result(1) == 42
+
+    inner2: Future = Future()
+    outer2 = chain_future(inner2, lambda v: v)
+    inner2.set_exception(RuntimeError("boom"))
+    with pytest.raises(RuntimeError, match="boom"):
+        outer2.result(1)
+
+    inner3: Future = Future()
+    outer3 = chain_future(inner3, lambda v: v)
+    inner3.cancel()
+    assert outer3.cancelled()
+
+
+# --------------------------------------------------------------------------- #
+# QueryStats schema
+# --------------------------------------------------------------------------- #
+
+
+def test_query_stats_to_dict_one_schema():
+    s = QueryStats(data={"queries": 3})
+    assert s.to_dict() == {"queries": 3}  # no latency keys until timed
+    s.record_latency(1.0)
+    s.record_latency(3.0)
+    d = s.to_dict()
+    assert d["queries"] == 3 and d["queries_timed"] == 2
+    assert d["p50_ms"] <= d["p99_ms"]
+    assert s.summary() == d  # deprecated alias delegates
+
+
+def test_stats_schema_consistent_across_layers(corpus, engine):
+    engine.query("vinyl reissue", backend="jax")
+    eng_keys = set(engine.last_stats.to_dict())
+    with ClusterService.from_tree(corpus, 2, batch_window_ms=0.5) as svc:
+        svc.query("vinyl reissue")
+        cluster = svc.stats().to_dict()
+    # the cluster rollup carries the same plan/launch counter names the
+    # engine's vectorized drain emits (plus routing/admission counters)
+    assert eng_keys & set(cluster), (eng_keys, set(cluster))
+    assert "p50_ms" in cluster and "generations" in cluster
+    assert cluster["queries"] == 1
+
+
+# --------------------------------------------------------------------------- #
+# Engine: Query in, QueryResult out; legacy equivalence
+# --------------------------------------------------------------------------- #
+
+
+def test_engine_query_api_matches_legacy(engine):
+    for sem in ("slca", "elca"):
+        legacy = engine.query("vinyl reissue", semantics=sem, backend="scalar")
+        res = engine.query(Query.make("vinyl reissue", sem, backend="scalar"))
+        assert isinstance(res, QueryResult)
+        np.testing.assert_array_equal(res.ids, legacy)
+        assert res.generations == ()
+        assert res.stats["latency_ms"] >= 0
+
+
+def test_engine_query_api_tree_index(engine):
+    legacy = engine.query("vinyl", index="tree", backend="scalar")
+    res = engine.query(Query.make("vinyl", index="tree", backend="scalar"))
+    np.testing.assert_array_equal(res.ids, legacy)
+
+
+def test_engine_rejects_bad_semantics_even_for_unknown_keywords(engine):
+    """Regression: validation must precede the unknown-keyword early
+    return — the old code returned an empty array for any semantics."""
+    with pytest.raises(ValueError, match="semantics"):
+        engine.query("zzz-not-a-word", semantics="bogus")
+    with pytest.raises(ValueError, match="semantics"):
+        engine.query(Query("zzz-not-a-word", semantics="bogus"))
+    with pytest.raises(ValueError, match="backend"):
+        engine.query("zzz-not-a-word", backend="cuda")
+    with pytest.raises(ValueError, match="index"):
+        engine.query("zzz-not-a-word", index="btree")
+    # the tree-index + explicit-algorithm path validates too
+    with pytest.raises(ValueError, match="semantics"):
+        engine.query("zzz-not-a-word", semantics="bogus", index="tree",
+                     algorithm="fwd_slca")
+    # and a *known* keyword with bad semantics still raises on every index
+    with pytest.raises(ValueError, match="semantics"):
+        engine.query("vinyl", semantics="bogus", index="tree")
+
+
+def test_engine_batch_rejects_bad_semantics(engine):
+    with pytest.raises(ValueError, match="semantics"):
+        engine.query_batch([["zzz-not-a-word"]], semantics="bogus")
+
+
+# --------------------------------------------------------------------------- #
+# QueryService + ClusterService: unified surface
+# --------------------------------------------------------------------------- #
+
+
+def test_service_query_api_matches_legacy(engine):
+    with QueryService(engine, batch_window_ms=0.5, backend="jax") as svc:
+        legacy = svc.query("vinyl reissue", "elca")
+        res = svc.query(Query.make("vinyl reissue", "elca"))
+        assert isinstance(res, QueryResult)
+        np.testing.assert_array_equal(res.ids, legacy)
+        assert res.stats["latency_ms"] > 0 and res.generations == ()
+        # jax and xla are the same drain: both pass the mismatch check
+        res2 = svc.query(Query.make("vinyl reissue", "elca", backend="xla"))
+        np.testing.assert_array_equal(res2.ids, legacy)
+        with pytest.raises(ValueError, match="backend mismatch"):
+            svc.submit(Query.make("vinyl", backend="scalar"))
+        with pytest.raises(ValueError, match="index"):
+            svc.submit(Query.make("vinyl", index="tree"))
+
+
+def test_cluster_query_api_matches_legacy(corpus, engine):
+    with ClusterService.from_tree(corpus, 2, batch_window_ms=0.5) as svc:
+        for kws in ("vinyl reissue", "zzz-not-a-word", "releases"):
+            for sem in ("slca", "elca"):
+                legacy = svc.query(kws, sem)
+                res = svc.query(Query.make(kws, sem))
+                assert isinstance(res, QueryResult)
+                np.testing.assert_array_equal(res.ids, legacy, err_msg=kws)
+                np.testing.assert_array_equal(
+                    res.ids,
+                    engine.query(kws, semantics=sem, backend="scalar"),
+                    err_msg=kws,
+                )
+                assert res.generations == (0, 0)
+        with pytest.raises(ValueError, match="backend mismatch"):
+            svc.submit(Query.make("vinyl", backend="scalar"))
+        with pytest.raises(ValueError, match="index"):
+            svc.submit(Query.make("vinyl", index="tree"))
+
+
+def test_cluster_generations_track_reloads(tmp_path, corpus):
+    with ClusterService.from_tree(corpus, 2, batch_window_ms=0.5) as svc:
+        assert svc.generation_vector() == (0, 0)
+        new_dir = str(tmp_path / "shard1-regen")
+        svc.pool.workers[1].engine.save(new_dir)
+        svc.reload_shard(1, new_dir)
+        assert svc.generation_vector() == (0, 1)
+        res = svc.query(Query.make("vinyl"))
+        assert res.generations == (0, 1)
+        assert svc.stats().data["generations"] == [0, 1]
+
+
+def test_cluster_touched_fanout(corpus):
+    with ClusterService.from_tree(corpus, 4, batch_window_ms=0.5) as svc:
+        # a unique leaf routes to exactly one shard
+        assert len(svc.touched(["img-3.jpg"])) == 1
+        # unknown keywords conservatively touch everything
+        assert svc.touched(["zzz-not-a-word"]) == (0, 1, 2, 3)
+        # root-only keyword: empty fanout → everything
+        assert svc.touched(["releases"]) == (0, 1, 2, 3)

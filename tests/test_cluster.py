@@ -738,6 +738,7 @@ def test_migrate_cluster_upgrades_old_manifest(tmp_path, corpus, expected):
     for s in manifest["shards"]:  # regress the manifest to v1
         del s["generation"]
         del s["endpoint"]
+        del s["replicas"]
     manifest["cluster_format_version"] = 1
     with open(mpath, "w") as f:
         json.dump(manifest, f)
@@ -747,6 +748,7 @@ def test_migrate_cluster_upgrades_old_manifest(tmp_path, corpus, expected):
     m = migrate_cluster(path)
     assert [s["generation"] for s in m["shards"]] == [0, 0]
     assert [s["endpoint"] for s in m["shards"]] == [None, None]
+    assert [s["replicas"] for s in m["shards"]] == [[], []]
     assert migrate_cluster(path) == m  # already current: no-op
     with ClusterService.from_dir(path, batch_window_ms=1.0) as svc:
         np.testing.assert_array_equal(

@@ -1,0 +1,266 @@
+"""HTTP gateway: round-trip exactness, edge-cache coherence, error mapping.
+
+The acceptance property mirrors the cluster suite's: ids served over HTTP
+must be byte-identical to the monolithic engine for every query x
+semantics.  The edge cache must serve repeats without touching the
+cluster and must invalidate itself when a ``rolling_publish`` bumps the
+generation of any shard the query touched.
+"""
+import http.client
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterService, build_cluster, rolling_publish
+from repro.core import KeywordSearchEngine
+from repro.data import QUERIES, generate_discogs_tree
+from repro.gateway import EdgeCache, Gateway
+
+N_RELEASES = 16
+SMOKE_QUERIES = [kws for _, kws in QUERIES.values()][:4] + [
+    ["img-3.jpg", "vinyl"],  # single-shard fanout
+    ["releases"],  # root-only
+    ["zzz-not-a-word"],  # unknown keyword
+]
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_discogs_tree(n_releases=N_RELEASES, seed=5)
+
+
+@pytest.fixture(scope="module")
+def mono(corpus):
+    return KeywordSearchEngine(corpus)
+
+
+@pytest.fixture()
+def gateway(corpus):
+    svc = ClusterService.from_tree(corpus, 2, batch_window_ms=0.5)
+    with Gateway(svc, own_service=True).start() as gw:
+        yield gw
+
+
+def _req(gw, method, path, body=None):
+    conn = http.client.HTTPConnection(gw.host, gw.port, timeout=60)
+    try:
+        payload = None if body is None else json.dumps(body)
+        conn.request(method, path, body=payload)
+        resp = conn.getresponse()
+        return resp.status, json.loads(resp.read().decode())
+    finally:
+        conn.close()
+
+
+# --------------------------------------------------------------------------- #
+# Round-trip exactness
+# --------------------------------------------------------------------------- #
+
+
+def test_http_results_match_monolith(gateway, mono):
+    for kws in SMOKE_QUERIES:
+        for sem in ("slca", "elca"):
+            want = mono.query(kws, semantics=sem, backend="scalar")
+            status, obj = _req(
+                gateway, "POST", "/query",
+                {"keywords": kws, "semantics": sem},
+            )
+            assert status == 200, obj
+            np.testing.assert_array_equal(
+                np.asarray(obj["ids"], dtype=np.int64), want,
+                err_msg=f"{kws} {sem}",
+            )
+            assert obj["cached"] is False or obj["cached"] is True
+            assert obj["generations"] == [0, 0]
+            assert "latency_ms" in obj["stats"]
+
+
+def test_http_keywords_string_form(gateway, mono):
+    want = mono.query("vinyl reissue", backend="scalar")
+    status, obj = _req(gateway, "POST", "/query",
+                       {"keywords": "vinyl reissue"})
+    assert status == 200
+    np.testing.assert_array_equal(np.asarray(obj["ids"], dtype=np.int64), want)
+
+
+def test_http_keepalive_multiple_requests(gateway):
+    conn = http.client.HTTPConnection(gateway.host, gateway.port, timeout=60)
+    try:
+        for _ in range(3):
+            conn.request("POST", "/query",
+                         body=json.dumps({"keywords": "vinyl"}))
+            resp = conn.getresponse()
+            assert resp.status == 200
+            json.loads(resp.read().decode())
+    finally:
+        conn.close()
+    assert gateway.counters["requests"] >= 3
+
+
+# --------------------------------------------------------------------------- #
+# Edge cache
+# --------------------------------------------------------------------------- #
+
+
+def test_http_cache_hit_on_repeat(gateway):
+    body = {"keywords": "vinyl reissue", "semantics": "elca"}
+    _, first = _req(gateway, "POST", "/query", body)
+    assert first["cached"] is False
+    _, second = _req(gateway, "POST", "/query", body)
+    assert second["cached"] is True
+    assert second["ids"] == first["ids"]
+    # string and list keyword forms share one cache entry
+    _, third = _req(
+        gateway, "POST", "/query",
+        {"keywords": ["vinyl", "reissue"], "semantics": "elca"},
+    )
+    assert third["cached"] is True
+    assert gateway.cache.hits >= 2
+
+
+def test_edge_cache_unit():
+    c = EdgeCache(max_entries=2)
+    c.put("a", 1, (0,), (0, 0))
+    assert c.get("a", (0, 0)) == 1
+    # untouched shard bumps don't invalidate
+    assert c.get("a", (0, 5)) == 1
+    # touched shard bump kills the entry
+    assert c.get("a", (1, 5)) is None
+    assert c.snapshot()["invalidations"] == 1
+    # repartition (vector length change) kills too
+    c.put("b", 2, (0,), (0,))
+    assert c.get("b", (0, 0)) is None
+    # LRU bound
+    c.put("x", 1, (), (0,))
+    c.put("y", 2, (), (0,))
+    c.put("z", 3, (), (0,))
+    assert len(c) == 2 and c.get("x", (0,)) is None
+    # a touched shard outside the stamp vector: refuse to cache
+    c.put("w", 4, (3,), (0, 0))
+    assert c.get("w", (0, 0)) is None
+    with pytest.raises(ValueError, match="max_entries"):
+        EdgeCache(0)
+
+
+def test_cache_invalidated_by_rolling_publish(tmp_path, corpus, mono):
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    svc = ClusterService.from_dir(path, batch_window_ms=0.5)
+    with Gateway(svc, own_service=True).start() as gw:
+        body = {"keywords": "vinyl reissue"}
+        _, r1 = _req(gw, "POST", "/query", body)
+        _, r2 = _req(gw, "POST", "/query", body)
+        assert (r1["cached"], r2["cached"]) == (False, True)
+        assert r2["generations"] == [0, 0]
+
+        rolling_publish(path, corpus, service=svc)
+
+        _, health = _req(gw, "GET", "/healthz")
+        assert health["generations"] == [1, 1]
+        _, r3 = _req(gw, "POST", "/query", body)
+        assert r3["cached"] is False  # stamp drifted: recomputed
+        assert r3["generations"] == [1, 1]
+        assert r3["ids"] == r1["ids"]
+        _, r4 = _req(gw, "POST", "/query", body)
+        assert r4["cached"] is True  # re-cached against the new stamp
+        assert gw.cache.snapshot()["invalidations"] >= 1
+        np.testing.assert_array_equal(
+            np.asarray(r3["ids"], dtype=np.int64),
+            mono.query("vinyl reissue", backend="scalar"),
+        )
+
+
+# --------------------------------------------------------------------------- #
+# Error mapping + introspection routes
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize(
+    "body,frag",
+    [
+        (b"{not json", "invalid JSON"),
+        (json.dumps({"kw": "x"}).encode(), "unknown query fields"),
+        (json.dumps({"keywords": "x", "semantics": "no"}).encode(), "semantics"),
+        (json.dumps({"keywords": "x", "backend": "cuda"}).encode(), "backend"),
+        (json.dumps([1]).encode(), "JSON object"),
+    ],
+)
+def test_http_400_paths(gateway, body, frag):
+    conn = http.client.HTTPConnection(gateway.host, gateway.port, timeout=60)
+    try:
+        conn.request("POST", "/query", body=body)
+        resp = conn.getresponse()
+        obj = json.loads(resp.read().decode())
+    finally:
+        conn.close()
+    assert resp.status == 400
+    assert frag in obj["error"]
+
+
+def test_http_404_405(gateway):
+    status, obj = _req(gateway, "GET", "/nope")
+    assert status == 404 and "no route" in obj["error"]
+    status, obj = _req(gateway, "GET", "/query")
+    assert status == 405
+    status, obj = _req(gateway, "POST", "/healthz")
+    assert status == 405
+    assert gateway.counters["errors"] >= 3
+
+
+def test_http_healthz_and_stats(gateway):
+    status, health = _req(gateway, "GET", "/healthz")
+    assert status == 200
+    assert health == {"ok": True, "shards": 2, "generations": [0, 0]}
+
+    _req(gateway, "POST", "/query", {"keywords": "vinyl"})
+    _req(gateway, "POST", "/query", {"keywords": "vinyl"})
+    status, stats = _req(gateway, "GET", "/stats")
+    assert status == 200
+    assert stats["gateway"]["queries"] >= 2
+    # the repeat was a cache hit: it never reached the cluster
+    assert stats["service"]["queries"] < stats["gateway"]["queries"]
+    cache = stats["gateway"]["cache"]
+    assert cache["hits"] >= 1 and cache["entries"] >= 1
+    assert stats["generations"] == [0, 0]
+
+
+def test_gateway_close_idempotent(corpus):
+    svc = ClusterService.from_tree(corpus, 2, batch_window_ms=0.5)
+    gw = Gateway(svc, own_service=True).start()
+    _req(gw, "GET", "/healthz")
+    gw.close()
+    gw.close()  # second close is a no-op
+    with pytest.raises((ConnectionError, OSError)):
+        _req(gw, "GET", "/healthz")
+
+
+# --------------------------------------------------------------------------- #
+# Supervised subprocess launch (the CLI entrypoint)
+# --------------------------------------------------------------------------- #
+
+
+def test_launch_gateway_subprocess(tmp_path, corpus, mono):
+    from repro.gateway import launch_gateway
+
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    proc, ep = launch_gateway(path, transport="thread", backend="jax")
+    host, port = ep.rsplit(":", 1)
+    try:
+        conn = http.client.HTTPConnection(host, int(port), timeout=120)
+        try:
+            conn.request("POST", "/query",
+                         body=json.dumps({"keywords": "vinyl reissue"}))
+            resp = conn.getresponse()
+            obj = json.loads(resp.read().decode())
+        finally:
+            conn.close()
+        assert resp.status == 200
+        np.testing.assert_array_equal(
+            np.asarray(obj["ids"], dtype=np.int64),
+            mono.query("vinyl reissue", backend="scalar"),
+        )
+    finally:
+        proc.kill()
+        proc.wait(10)

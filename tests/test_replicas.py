@@ -1,0 +1,348 @@
+"""ReplicaSet: hedged dispatch, failover, resurrection.
+
+The deterministic half drives a ReplicaSet of fake in-process workers
+(controllable latency/failure per replica), pinning the exact hedging
+contract: hedge fires after the delay, first result wins, the loser is
+cancelled, failures roll to the next replica, and the caller sees the
+typed WorkerDied only when every replica is gone.  The integration half
+runs the process transport: SIGKILL one replica mid-stream (zero client
+errors, the slot respawns) and SIGSTOP one replica (the hedge bounds the
+stall instead of inheriting it).
+"""
+import os
+import signal
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterService, WorkerDied
+from repro.cluster.partition import split_doc_ranges
+from repro.cluster.workers.replica import ReplicaSet
+from repro.core import KeywordSearchEngine
+from repro.data import generate_discogs_tree
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_discogs_tree(n_releases=12, seed=5)
+
+
+@pytest.fixture(scope="module")
+def spec(corpus):
+    return split_doc_ranges(corpus, 1)[0]
+
+
+class FakeWorker:
+    """Worker-protocol stub with a scriptable submit future per replica.
+
+    ``delay=None`` parks the future forever (a stalled replica);
+    ``fail=`` completes it with that exception; otherwise a timer thread
+    resolves it with ``(slot, keywords)`` after ``delay`` seconds.
+    """
+
+    def __init__(self, slot, on_death, delay=0.0, fail=None):
+        self.slot = slot
+        self.on_death = on_death
+        self.delay = delay
+        self.fail = fail
+        self.calls = 0
+        self.closed = False
+        self.pending: list[Future] = []
+
+    def submit(self, keywords, semantics):
+        self.calls += 1
+        fut: Future = Future()
+        self.pending.append(fut)
+
+        def finish():
+            if self.fail is not None:
+                if not fut.cancelled():
+                    fut.set_exception(self.fail)
+            elif not fut.cancelled():
+                fut.set_result((self.slot, tuple(keywords)))
+
+        if self.delay is None:
+            return fut  # parked forever: the stall case
+        if self.delay == 0:
+            finish()
+        else:
+            t = threading.Timer(self.delay, finish)
+            t.daemon = True
+            t.start()
+        return fut
+
+    def doc_stats(self, kw_ids):
+        return self.submit([str(k) for k in kw_ids], "stats")
+
+    def stats(self):
+        from repro.core.engine import QueryStats
+
+        return QueryStats(data={"queries": self.calls})
+
+    def drain(self, timeout=30.0):
+        pass
+
+    def close(self, timeout=30.0):
+        self.closed = True
+
+    def die(self):
+        """Simulate the reader thread noticing the transport died."""
+        self.on_death(self)
+
+
+def make_set(spec, behaviours, **kw):
+    """ReplicaSet over FakeWorkers; behaviours[slot] = dict for FakeWorker."""
+    built: list[FakeWorker] = []
+
+    def factory(slot, on_death):
+        w = FakeWorker(slot, on_death, **behaviours[slot % len(behaviours)])
+        built.append(w)
+        return w
+
+    rs = ReplicaSet(spec, factory, len(behaviours), **kw)
+    return rs, built
+
+
+# --------------------------------------------------------------------------- #
+# Deterministic hedging
+# --------------------------------------------------------------------------- #
+
+
+def test_hedge_fires_on_stalled_replica_and_cancels_loser(spec):
+    # replica 0 stalls forever; replica 1 answers instantly
+    rs, built = make_set(spec, [{"delay": None}, {"delay": 0.0}],
+                         hedge_ms=20.0)
+    try:
+        slot, kws = rs.submit(["vinyl"], "slca").result(timeout=10)
+        assert slot == 1 and kws == ("vinyl",)
+        s = rs.stats().data
+        assert s["hedges_fired"] == 1 and s["hedge_wins"] == 1
+        assert s["failovers"] == 0
+        # the stalled loser's future was cancelled, not abandoned
+        assert built[0].pending[0].cancelled()
+    finally:
+        rs.close()
+
+
+def test_fast_primary_wins_without_hedge(spec):
+    rs, built = make_set(spec, [{"delay": 0.0}, {"delay": 0.0}],
+                         hedge_ms=10_000.0)
+    try:
+        rs.submit(["a"], "slca").result(timeout=10)
+        s = rs.stats().data
+        assert s["hedges_fired"] == 0 and s["hedge_wins"] == 0
+        # round-robin: the second call starts on the other replica
+        rs.submit(["b"], "slca").result(timeout=10)
+        assert built[0].calls == 1 and built[1].calls == 1
+    finally:
+        rs.close()
+
+
+def test_hedge_loser_result_is_dropped(spec):
+    # both answer, primary slower: the hedge wins, the late primary result
+    # must land on a cancelled future (dropped on delivery)
+    rs, built = make_set(spec, [{"delay": 0.2}, {"delay": 0.0}],
+                         hedge_ms=10.0)
+    try:
+        slot, _ = rs.submit(["x"], "slca").result(timeout=10)
+        assert slot == 1
+        time.sleep(0.3)  # let the loser's timer deliver into the dead future
+        assert built[0].pending[0].cancelled()
+        assert rs.stats().data["hedge_wins"] == 1
+    finally:
+        rs.close()
+
+
+def test_hedge_disabled_with_inf(spec):
+    rs, _ = make_set(spec, [{"delay": 0.05}, {"delay": 0.0}],
+                     hedge_ms=float("inf"))
+    try:
+        slot, _ = rs.submit(["x"], "slca").result(timeout=10)
+        assert slot == 0  # no hedge: the slow primary still answers
+        assert rs.stats().data["hedges_fired"] == 0
+    finally:
+        rs.close()
+
+
+def test_adaptive_hedge_delay_tracks_percentile(spec):
+    rs, _ = make_set(spec, [{"delay": 0.0}, {"delay": 0.0}])
+    try:
+        assert rs._hedge_delay_s() == pytest.approx(0.05)  # cold default
+        for ms in [1.0] * 100:
+            rs._record_latency(ms)
+        # p95 of 1ms wins clamps to the floor
+        assert rs._hedge_delay_s() == pytest.approx(0.002)
+        for ms in [40.0] * 100:
+            rs._record_latency(ms)
+        assert rs._hedge_delay_s() >= 0.02
+    finally:
+        rs.close()
+
+
+def test_single_replica_never_hedges(spec):
+    rs, _ = make_set(spec, [{"delay": 0.0}], hedge_ms=0.0)
+    try:
+        assert rs._hedge_delay_s() is None
+        rs.submit(["x"], "slca").result(timeout=10)
+        assert rs.stats().data["hedges_fired"] == 0
+    finally:
+        rs.close()
+
+
+# --------------------------------------------------------------------------- #
+# Failover + death
+# --------------------------------------------------------------------------- #
+
+
+def test_failed_attempt_rolls_to_next_replica(spec):
+    rs, _ = make_set(
+        spec,
+        [{"fail": WorkerDied(0, "shot")}, {"delay": 0.0}],
+        hedge_ms=10_000.0,  # hedging off: pure failover path
+    )
+    try:
+        slot, _ = rs.submit(["x"], "slca").result(timeout=10)
+        assert slot == 1
+        s = rs.stats().data
+        assert s["failovers"] == 1 and s["hedge_wins"] == 0
+    finally:
+        rs.close()
+
+
+def test_all_replicas_failing_surfaces_typed(spec):
+    rs, _ = make_set(
+        spec,
+        [{"fail": WorkerDied(0, "a")}, {"fail": WorkerDied(0, "b")}],
+        hedge_ms=10_000.0,
+    )
+    try:
+        with pytest.raises(WorkerDied):
+            rs.submit(["x"], "slca").result(timeout=10)
+    finally:
+        rs.close()
+
+
+def test_replica_death_marks_slot_and_respawns(spec):
+    rs, built = make_set(
+        spec, [{"delay": 0.0}, {"delay": 0.0}],
+        hedge_ms=10_000.0, respawn_backoff=0.01,
+    )
+    try:
+        built[0].die()
+        deadline = time.time() + 10
+        while rs.stats().data.get("replica_respawns", 0) < 1:
+            assert time.time() < deadline, rs.stats().data
+            time.sleep(0.02)
+        s = rs.stats().data
+        assert s["replica_deaths"] == 1 and s["replicas_live"] == 2
+        assert rs.replicas[0] is not built[0]
+        # a stale double-notification from the dead worker is ignored
+        built[0].die()
+        assert rs.stats().data["replica_deaths"] == 1
+    finally:
+        rs.close()
+
+
+def test_respawn_budget_bounds_flapping(spec):
+    calls = {"n": 0}
+
+    def factory(slot, on_death):
+        calls["n"] += 1
+        return FakeWorker(slot, on_death, delay=0.0)
+
+    rs = ReplicaSet(spec, factory, 1, max_respawns=2, respawn_backoff=0.01)
+    try:
+        for _ in range(5):  # die more often than the budget allows
+            w = rs.replicas[0]
+            w.die()
+            deadline = time.time() + 5
+            while rs.replicas[0] is w and time.time() < deadline:
+                time.sleep(0.01)
+        # 1 initial build + at most max_respawns rebuilds
+        assert calls["n"] <= 3
+        assert rs.stats().data["replica_respawns"] <= 2
+    finally:
+        rs.close()
+
+
+def test_doc_stats_is_hedged_too(spec):
+    rs, built = make_set(spec, [{"delay": None}, {"delay": 0.0}],
+                         hedge_ms=10.0)
+    try:
+        slot, kws = rs.doc_stats([1, 2]).result(timeout=10)
+        assert slot == 1 and kws == ("1", "2")
+        assert rs.stats().data["hedges_fired"] == 1
+    finally:
+        rs.close()
+
+
+def test_replica_set_validates_n(spec):
+    with pytest.raises(ValueError, match="replica"):
+        ReplicaSet(spec, lambda s, d: None, 0)
+
+
+# --------------------------------------------------------------------------- #
+# Process-transport integration
+# --------------------------------------------------------------------------- #
+
+
+def _expected(corpus, q):
+    return KeywordSearchEngine(corpus).query(q, backend="scalar")
+
+
+def test_process_replicas_kill_one_is_invisible(corpus):
+    """SIGKILL one replica mid-stream: zero client-visible errors, the
+    query stream stays byte-identical, and the slot respawns."""
+    want = _expected(corpus, "vinyl reissue")
+    with ClusterService.from_tree(
+        corpus, 2, transport="process", replicas=2, batch_window_ms=0.5,
+    ) as svc:
+        assert svc.pool.locality == ["replicas", "replicas"]
+        for i in range(30):
+            if i == 5:
+                rs = svc.pool.workers[0]
+                os.kill(rs.replicas[0]._proc.pid, signal.SIGKILL)
+            got = svc.query("vinyl reissue", timeout=60)
+            np.testing.assert_array_equal(got, want, err_msg=f"iter {i}")
+        s = svc.stats().data
+        assert s["replica_deaths"] >= 1
+        # the dead slot comes back within the respawn window
+        deadline = time.time() + 60
+        while svc.stats().data.get("replicas_live", 0) < 4:
+            assert time.time() < deadline, svc.stats().data
+            time.sleep(0.25)
+
+
+def test_process_replicas_hedge_masks_stall(corpus):
+    """SIGSTOP one replica of each shard: the hedge fires and bounds the
+    tail — queries complete fast instead of inheriting the stall."""
+    want = _expected(corpus, "vinyl reissue")
+    with ClusterService.from_tree(
+        corpus, 2, transport="process", replicas=2,
+        hedge_ms=25.0, batch_window_ms=0.5,
+    ) as svc:
+        for _ in range(3):
+            svc.query("vinyl reissue", timeout=60)  # warm all replicas
+        stalled = []
+        try:
+            for rs in svc.pool.workers:
+                pid = rs.replicas[0]._proc.pid
+                os.kill(pid, signal.SIGSTOP)
+                stalled.append(pid)
+            lat = []
+            for i in range(10):
+                t0 = time.perf_counter()
+                got = svc.query("vinyl reissue", timeout=60)
+                lat.append((time.perf_counter() - t0) * 1e3)
+                np.testing.assert_array_equal(got, want, err_msg=f"iter {i}")
+            # every query must finish in hedge-delay territory, nowhere
+            # near a stall-length timeout
+            assert max(lat) < 5_000, lat
+            s = svc.stats().data
+            assert s["hedges_fired"] >= 1 and s["hedge_wins"] >= 1
+        finally:
+            for pid in stalled:
+                os.kill(pid, signal.SIGCONT)
