@@ -61,6 +61,7 @@ from repro.cluster import ClusterService, Overloaded, build_cluster
 from repro.cluster.workers.server import launch_cluster_servers
 from repro.core import KeywordSearchEngine
 from repro.data import QUERIES, generate_discogs_tree
+from repro.obs import TRACER, make_traceparent, new_span_id, new_trace_id
 from repro.serve import QueryService
 
 N = int(os.environ.get("BENCH_CLUSTER_RELEASES", "0")) or max(N_RELEASES, 1440)
@@ -103,6 +104,21 @@ def _bench(svc, work, timed_reps: int) -> float:
         prev = misses
     reps = sorted(_drive(svc, work) for _ in range(timed_reps))
     return reps[len(reps) // 2]
+
+
+def _drive_traced(svc, work) -> float:
+    """Like ``_drive`` but every query carries a fresh traceparent, so the
+    full span pipeline (router fanout, shard gathers, service batch,
+    engine phases) runs for every single request."""
+    t0 = time.perf_counter()
+    futs = [
+        svc.submit(q, "slca",
+                   trace=make_traceparent(new_trace_id(), new_span_id()))
+        for q in work
+    ]
+    for f in futs:
+        f.result(timeout=600)
+    return len(work) / (time.perf_counter() - t0)
 
 
 def unique_workload(n: int) -> list[list[str]]:
@@ -284,6 +300,58 @@ def run() -> None:
                 arrival=lambda i: (i // b) * (b / RATE),
             )
             _open_row("open_unique", "thread", svc, adv, RATE)
+
+        # tracing overhead: the same all-unique burst, untraced vs with a
+        # traceparent on every query (full span pipeline at every layer).
+        # Unique queries so coalescing can't amortize the per-span cost
+        # away; thread transport so the comparison carries no RPC noise.
+        # The trace_on row's speedup column holds the overhead ratio
+        # compare.py enforces (must stay >= 0.95).
+        with ClusterService.from_dir(
+            art, batch_window_ms=2.0, max_queue_per_shard=4096
+        ) as svc:
+            # warm BOTH modes until the plan-shape set stops growing:
+            # traced submission shifts window composition, which keeps
+            # discovering new R-bucket shapes and paying jit compiles
+            prev = -1
+            for _ in range(6 if SMOKE else 10):
+                _drive(svc, unique)
+                _drive_traced(svc, unique)
+                TRACER.clear()
+                misses = svc.stats().summary().get("plan_misses", -2)
+                if misses == prev:
+                    break
+                prev = misses
+
+            # Residual jit compiles and scheduler stalls move single-drive
+            # qps by 2-3x — far above the 5% effect under test — so no
+            # aggregate of independent off/on samples is stable here.
+            # Adjacent drives DO share drift, so measure off/on as pairs
+            # and gate on the median of the per-pair ratios: the 1-3
+            # stall-poisoned pairs per run land in the tails and drop out.
+            def _multi(fn, passes: int = 3) -> float:
+                t0 = time.perf_counter()
+                for _ in range(passes):
+                    fn(svc, unique)
+                return passes * len(unique) / (time.perf_counter() - t0)
+
+            pairs = []
+            for _ in range(7):
+                o = _multi(_drive)
+                t = _multi(_drive_traced)
+                TRACER.clear()
+                pairs.append((o, t))
+            ratio = sorted(t / o for o, t in pairs)[len(pairs) // 2]
+            off = sorted(o for o, _ in pairs)[len(pairs) // 2]
+            s = svc.stats().summary()
+            print(
+                f"trace_off,thread,{off:.0f},{s['p50_ms']},{s['p99_ms']},"
+                "0.00,1.000,0"
+            )
+            print(
+                f"trace_on,thread,{off * ratio:.0f},{s['p50_ms']},"
+                f"{s['p99_ms']},0.00,{ratio:.3f},0"
+            )
 
     # one stalled replica: hedging keeps the tail near the hedge delay;
     # without it the tail inherits the full stall.  One replicated process

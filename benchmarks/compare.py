@@ -1,0 +1,137 @@
+"""Diff two ``run.py --json`` reports and fail CI on perf regressions.
+
+Two checks, both against the cluster section's CSV records:
+
+  * **steady-state regression** — the steady serving row (default: the
+    ``cluster<N>_zipf`` row on the ``thread`` transport) must not lose
+    more than ``--threshold`` (default 25%) qps vs the committed snapshot
+    in ``benchmarks/snapshots/``.  Smoke-mode qps on shared CI runners is
+    noisy, hence the generous band — this catches collapses, not drift.
+  * **tracing overhead** — within the *current* report alone, the
+    ``trace_on`` row's overhead ratio (its ``speedup_vs_mono`` column,
+    which bench_cluster fills with the median per-pair qps(on)/qps(off)
+    ratio) must stay at least ``1 - --overhead-threshold`` (default
+    95%).  This is the gate that keeps per-query tracing effectively
+    free: if span bookkeeping leaks cost into the hot path, this trips
+    before a human notices.
+
+Exit status 0 = both checks pass, 1 = any check fails or a required row
+is missing.  Usage::
+
+    python -m benchmarks.run --smoke --section cluster --json current.json
+    python -m benchmarks.compare current.json \
+        --snapshot benchmarks/snapshots/BENCH_*.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _records(report: dict) -> list[dict]:
+    recs: list[dict] = []
+    for section in report.get("sections", []):
+        recs.extend(section.get("records", []))
+    return recs
+
+
+def find_row(report: dict, pattern: str, transport: str | None) -> dict | None:
+    rx = re.compile(pattern)
+    for rec in _records(report):
+        if not rx.fullmatch(rec.get("variant", "")):
+            continue
+        if transport and rec.get("transport") != transport:
+            continue
+        return rec
+    return None
+
+
+def _qps(rec: dict) -> float:
+    return float(rec["qps"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="run.py --json report for this revision")
+    ap.add_argument(
+        "--snapshot", required=True,
+        help="committed baseline report (benchmarks/snapshots/...)",
+    )
+    ap.add_argument(
+        "--row", default=r"cluster\d+_zipf",
+        help="regex for the steady-state row's variant name",
+    )
+    ap.add_argument(
+        "--transport", default="thread",
+        help="transport the steady row must run on ('' = any)",
+    )
+    ap.add_argument(
+        "--threshold", type=float, default=0.25,
+        help="max allowed fractional qps loss vs the snapshot",
+    )
+    ap.add_argument(
+        "--overhead-threshold", type=float, default=0.05,
+        help="max allowed fractional qps cost of tracing (trace_on vs off)",
+    )
+    args = ap.parse_args(argv)
+    transport = args.transport or None
+
+    current = _load(args.current)
+    snapshot = _load(args.snapshot)
+    failed = False
+
+    # ------- steady-state qps vs the committed snapshot ------- #
+    cur = find_row(current, args.row, transport)
+    base = find_row(snapshot, args.row, transport)
+    if cur is None or base is None:
+        missing = "current" if cur is None else "snapshot"
+        print(f"FAIL: steady row {args.row!r} ({transport or 'any'} "
+              f"transport) missing from {missing} report")
+        failed = True
+    else:
+        cq, bq = _qps(cur), _qps(base)
+        floor = bq * (1.0 - args.threshold)
+        verdict = "ok" if cq >= floor else "FAIL"
+        print(
+            f"{verdict}: steady {cur['variant']}/{cur.get('transport', '?')} "
+            f"qps {cq:.0f} vs snapshot {bq:.0f} "
+            f"(floor {floor:.0f}, threshold -{args.threshold:.0%})"
+        )
+        failed |= cq < floor
+
+    # ------- tracing overhead within the current report ------- #
+    off = find_row(current, "trace_off", transport)
+    on = find_row(current, "trace_on", transport)
+    if off is None or on is None:
+        print("FAIL: trace_off/trace_on rows missing from current report")
+        failed = True
+    else:
+        # the trace_on row's speedup column carries the exact median
+        # per-pair ratio; the qps columns are integer-rounded and lose
+        # ~0.3% near the threshold, so fall back to them only if a
+        # foreign report omits the column
+        try:
+            ratio = float(on["speedup_vs_mono"])
+        except (KeyError, TypeError, ValueError):
+            ratio = _qps(on) / max(_qps(off), 1e-9)
+        floor = 1.0 - args.overhead_threshold
+        verdict = "ok" if ratio >= floor else "FAIL"
+        print(
+            f"{verdict}: tracing overhead qps(on)/qps(off) = "
+            f"{_qps(on):.0f}/{_qps(off):.0f} = {ratio:.3f} "
+            f"(floor {floor:.3f})"
+        )
+        failed |= ratio < floor
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,7 +26,7 @@ green.
 from __future__ import annotations
 
 from concurrent.futures import Future, InvalidStateError
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable
 
 import numpy as np
@@ -66,7 +66,7 @@ def normalize_keywords(keywords) -> tuple[str, ...]:
     return tuple(str(w) for w in keywords)
 
 
-_QUERY_FIELDS = ("keywords", "semantics", "index", "backend")
+_QUERY_FIELDS = ("keywords", "semantics", "index", "backend", "traceparent")
 
 
 @dataclass(frozen=True)
@@ -85,6 +85,11 @@ class Query:
     semantics: str = "slca"
     index: str = "dag"
     backend: str | None = None
+    # W3C-style trace header ("00-<32hex>-<16hex>-01"); None = untraced.
+    # Deliberately lenient: a malformed value means "no spans", never an
+    # error — tracing must not be able to fail a query.  Excluded from
+    # cache_key (tracing never changes the answer).
+    traceparent: str | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "keywords", normalize_keywords(self.keywords))
@@ -107,13 +112,20 @@ class Query:
         """Identity of the *logical* query: normalized keywords + semantics."""
         return (self.keywords, self.semantics, self.index)
 
+    def with_trace(self, traceparent: str | None) -> Query:
+        """A copy carrying ``traceparent`` (the gateway's propagation hook)."""
+        return replace(self, traceparent=traceparent)
+
     def to_dict(self) -> dict:
-        return {
+        out = {
             "keywords": list(self.keywords),
             "semantics": self.semantics,
             "index": self.index,
             "backend": self.backend,
         }
+        if self.traceparent is not None:
+            out["traceparent"] = self.traceparent
+        return out
 
     @classmethod
     def from_dict(cls, obj) -> Query:
@@ -128,11 +140,13 @@ class Query:
         kws = obj["keywords"]
         if not isinstance(kws, (str, list, tuple)):
             raise ValueError("'keywords' must be a string or a list of strings")
+        tp = obj.get("traceparent")
         return cls(
             keywords=kws,
             semantics=obj.get("semantics", "slca"),
             index=obj.get("index", "dag"),
             backend=obj.get("backend"),
+            traceparent=tp if isinstance(tp, str) else None,
         ).validate()
 
 

@@ -66,6 +66,7 @@ import numpy as np
 from repro.api import Query, QueryResult, chain_future, validate_semantics
 from repro.core.engine import QueryStats
 from repro.core.xml_tree import XMLTree
+from repro.obs import NULL_SPAN, TRACER
 
 from .admission import AdmissionController, Overloaded
 from .manifest import (
@@ -98,13 +99,18 @@ class _Gather:
     __slots__ = (
         "key", "futures", "kw_ids", "semantics", "shards", "workers",
         "routing", "fanout_mask", "all_present", "t0s", "remaining",
-        "results", "error", "lock",
+        "results", "error", "lock", "spans", "shard_spans",
     )
 
     def __init__(self, key, future, kw_ids, semantics, shards, workers,
-                 routing, fanout_mask, all_present, t0):
+                 routing, fanout_mask, all_present, t0, span=NULL_SPAN):
         self.key = key
         self.futures = [future]
+        # spans[i] belongs to futures[i]'s caller: [0] is the execution
+        # owner's router.submit span, the rest are coalesced joiners (each
+        # in its *own* trace — coalescing crosses trace boundaries)
+        self.spans = [span]
+        self.shard_spans: dict[int, object] = {}
         self.kw_ids = kw_ids
         self.semantics = semantics
         self.shards = shards
@@ -366,7 +372,12 @@ class ClusterService:
     # ------------------------------------------------------------------ #
     # Admission + scatter
     # ------------------------------------------------------------------ #
-    def submit(self, keywords: list[str] | str, semantics: str = "slca") -> Future:
+    def submit(
+        self,
+        keywords: list[str] | str,
+        semantics: str = "slca",
+        trace=None,
+    ) -> Future:
         """Route one query; the Future resolves to sorted corpus node ids.
 
         Raises :class:`Overloaded` *synchronously* when admission sheds the
@@ -383,7 +394,10 @@ class ClusterService:
         Pass a :class:`repro.api.Query` for a ``Future[QueryResult]`` (ids
         + per-request stats + the serving generation vector); the legacy
         ``(keywords, semantics)`` form is deprecated and resolves to the
-        bare ndarray.
+        bare ndarray.  ``trace`` (a traceparent string or
+        :class:`~repro.obs.TraceContext`) parents the router/shard/merge
+        spans; a coalesced joiner gets a single span in its *own* trace,
+        annotated with the owning execution's trace id.
         """
         if isinstance(keywords, Query):
             return self._submit_query(keywords)
@@ -392,6 +406,7 @@ class ClusterService:
             keywords = keywords.split()
         fut: Future = Future()
         t0 = time.perf_counter()
+        span = TRACER.start(trace, "router.submit", semantics=semantics)
         # one routing snapshot per query: rolling_publish may swap
         # self.routing mid-flight, and ids resolved on one table must never
         # be interpreted against another
@@ -406,10 +421,15 @@ class ClusterService:
             if running is not None:  # join the in-flight execution
                 running.futures.append(fut)
                 running.t0s.append(t0)
+                span.annotate(coalesced=True)
+                if running.spans[0].trace_id is not None:
+                    span.annotate(host_trace=running.spans[0].trace_id)
+                running.spans.append(span)
                 self._stats.data["coalesced"] += 1
                 return fut
         if not kw_ids or any(k < 0 for k in kw_ids):
             # unknown keyword: no document (and not the root) can match
+            span.end(outcome="unknown_keyword", results=0)
             self._finish([fut], _EMPTY, [t0])
             return fut
         fanout_mask = routing.fanout(kw_ids)
@@ -426,23 +446,36 @@ class ClusterService:
             if res.size:
                 with self._lock:
                     self._stats.data["root_results"] += 1
+            span.end(outcome="root_only", results=int(res.size))
             self._finish([fut], res, [t0])
             return fut
-        self.admission.acquire(shards)  # raises Overloaded on a full shard
+        try:
+            self.admission.acquire(shards)  # raises Overloaded on a full shard
+        except Overloaded:
+            span.end(error="Overloaded")
+            raise
+        span.annotate(fanout=len(shards))
         with self._lock:
             # pin the workers this execution runs on; reloads swap the pool
             # but never the gather
             workers = {s: self.pool.workers[s] for s in shards}
             state = _Gather(key, fut, kw_ids, semantics, shards, workers,
-                            routing, fanout_mask, all_present, t0)
+                            routing, fanout_mask, all_present, t0, span)
             self._inflight[key] = state
             self._active += 1
             for w in workers.values():
                 self._refs[w] = self._refs.get(w, 0) + 1
             self._stats.data["fanout_submits"] += len(shards)
         for s in shards:
+            ssp = TRACER.start(span.ctx, "shard.gather", shard=s)
+            state.shard_spans[s] = ssp
             try:
-                shard_fut = workers[s].submit(keywords, semantics)
+                ctx = ssp.ctx
+                shard_fut = (
+                    workers[s].submit(keywords, semantics, trace=ctx)
+                    if ctx is not None
+                    else workers[s].submit(keywords, semantics)
+                )
             except Exception as e:  # worker closed/dead: fail this shard
                 self._on_shard_done(state, s, None, e)
                 continue
@@ -483,7 +516,10 @@ class ClusterService:
                 ids=ids, stats={"latency_ms": lat}, generations=gens
             )
 
-        return chain_future(self.submit(list(q.keywords), q.semantics), finish)
+        return chain_future(
+            self.submit(list(q.keywords), q.semantics, trace=q.traceparent),
+            finish,
+        )
 
     def query(
         self,
@@ -513,6 +549,12 @@ class ClusterService:
     # Gather + merge
     # ------------------------------------------------------------------ #
     def _on_shard_done(self, state: _Gather, shard: int, fut, exc) -> None:
+        ssp = state.shard_spans.get(shard)
+        if ssp is not None:  # ended (recorded) before the gather can finish
+            if exc is not None:
+                ssp.end(error=f"{type(exc).__name__}: {exc}")
+            else:
+                ssp.end()
         with state.lock:
             if exc is not None:
                 state.error = state.error or exc
@@ -543,19 +585,29 @@ class ClusterService:
             self._inflight.pop(state.key, None)
         merged = None
         if state.error is None:
+            msp = TRACER.start(state.spans[0].ctx, "router.merge")
             try:
-                merged = self._merge(state)
+                merged = self._merge(state, trace=msp.ctx)
             except BaseException as e:
                 # a worker exception during merge/doc_stats must fail the
                 # gather, never strand it unfinalized (callers would hang)
                 state.error = e
+                msp.end(error=f"{type(e).__name__}: {e}")
+            else:
+                msp.end(results=int(merged.size))
+        # every caller's span ends (and records) before its future resolves
         if state.error is not None:
+            err = f"{type(state.error).__name__}: {state.error}"
+            for sp in state.spans:
+                sp.end(error=err)
             for fut in state.futures:
                 try:
                     fut.set_exception(state.error)
                 except InvalidStateError:
                     pass
         else:
+            for sp in state.spans:
+                sp.end(results=int(merged.size))
             self._finish(state.futures, merged, state.t0s)
         self._release_workers(state)
 
@@ -576,7 +628,7 @@ class ClusterService:
         for w in to_close:  # last rider gone: reclaim the swapped-out worker
             threading.Thread(target=w.close, daemon=True).start()
 
-    def _merge(self, state: _Gather) -> np.ndarray:
+    def _merge(self, state: _Gather, trace=None) -> np.ndarray:
         parts = []
         for s in state.shards:
             res = state.results[s]
@@ -588,17 +640,23 @@ class ClusterService:
         if state.semantics == "slca":
             root = merged.size == 0 and state.all_present
         else:
-            root = state.all_present and self._root_is_elca(state)
+            root = state.all_present and self._root_is_elca(state, trace)
         if root:
             merged = np.concatenate([np.zeros(1, dtype=np.int64), merged])
             with self._lock:
                 self._stats.data["root_results"] += 1
         return merged
 
-    def _root_is_elca(self, state: _Gather) -> bool:
+    def _root_is_elca(self, state: _Gather, trace=None) -> bool:
         """Residual check: every keyword occurs outside all full documents."""
         stat_futs = [
-            (s, state.workers[s].doc_stats(state.kw_ids)) for s in state.shards
+            (
+                s,
+                state.workers[s].doc_stats(state.kw_ids, trace=trace)
+                if trace is not None
+                else state.workers[s].doc_stats(state.kw_ids),
+            )
+            for s in state.shards
         ]
         docs_k = np.zeros(len(state.kw_ids), dtype=np.int64)
         full = 0
@@ -668,12 +726,43 @@ class ClusterService:
     # ------------------------------------------------------------------ #
     # Stats / lifecycle
     # ------------------------------------------------------------------ #
+    def shard_health(self) -> list[dict]:
+        """Per-shard replica liveness: the gateway's readiness probe input.
+
+        Workers that expose ``health()`` (ReplicaSets, RPC workers) report
+        ``(configured, live)`` replica counts; anything else falls back to
+        its ``_dead`` post-mortem (alive unless marked dead).
+        """
+        with self._lock:
+            workers = list(self.pool.workers)
+        rows = []
+        for i, w in enumerate(workers):
+            health = getattr(w, "health", None)
+            try:
+                if health is not None:
+                    configured, live = health()
+                else:
+                    configured = 1
+                    live = 0 if getattr(w, "_dead", None) is not None else 1
+            except Exception:
+                configured, live = 1, 0  # an unanswerable worker is down
+            rows.append(
+                {
+                    "shard": i,
+                    "transport": getattr(w, "transport", "?"),
+                    "replicas": int(configured),
+                    "replicas_live": int(live),
+                }
+            )
+        return rows
+
     def stats(self) -> QueryStats:
         """Cluster rollup: router counters + admission + shard aggregates."""
         with self._lock:
             snap = QueryStats(
                 data=dict(self._stats.data),
                 latencies_ms=list(self._stats.latencies_ms),
+                hist=self._stats.hist.copy(),
             )
             workers = list(self.pool.workers)
         snap.data["transport"] = self.pool.transport

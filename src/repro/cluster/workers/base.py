@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core.engine import QueryStats
 from repro.core.idlist import ContainmentTable
+from repro.obs import TRACER, LatencyHistogram, parse_traceparent
 
 from ..partition import ShardSpec
 from .proto import load_array, read_frame, write_frame
@@ -73,11 +74,16 @@ class Worker(Protocol):
 
     spec: ShardSpec
 
-    def submit(self, keywords: list[str], semantics: str) -> Future:
-        """Run one query; Future resolves to sorted shard-local node ids."""
+    def submit(self, keywords: list[str], semantics: str, trace=None) -> Future:
+        """Run one query; Future resolves to sorted shard-local node ids.
+
+        ``trace`` (a traceparent string or TraceContext, always optional —
+        the router only passes it for traced queries) parents the worker's
+        spans.  Implementations may ignore it.
+        """
         ...
 
-    def doc_stats(self, kw_ids: list[int]) -> Future:
+    def doc_stats(self, kw_ids: list[int], trace=None) -> Future:
         """Future of ``(docs-per-keyword counts, #docs containing all)``."""
         ...
 
@@ -111,6 +117,17 @@ def shard_doc_stats(
             pos = np.minimum(np.searchsorted(nodes, doc_roots), nodes.size - 1)
             present[j] = nodes[pos] == doc_roots
     return present.sum(axis=1).astype(np.int64), int(present.all(axis=0).sum())
+
+
+def _stamp_trace(msg: dict, trace) -> None:
+    """Attach the optional ``"tp"`` trace field to an outgoing RPC header.
+
+    Old servers ignore unknown header fields, so stamping is always safe;
+    anything unparsable is simply not stamped (tracing never fails an op).
+    """
+    ctx = parse_traceparent(trace) if trace is not None else None
+    if ctx is not None:
+        msg["tp"] = ctx.traceparent
 
 
 class RpcWorker:
@@ -158,15 +175,19 @@ class RpcWorker:
     # ------------------------------------------------------------------ #
     # Worker protocol (close/drain are transport-specific)
     # ------------------------------------------------------------------ #
-    def submit(self, keywords: list[str], semantics: str) -> Future:
-        return self._request(
-            {"op": "submit", "keywords": list(keywords), "semantics": semantics}
-        )
+    def submit(self, keywords: list[str], semantics: str, trace=None) -> Future:
+        msg = {"op": "submit", "keywords": list(keywords), "semantics": semantics}
+        _stamp_trace(msg, trace)
+        return self._request(msg)
 
-    def doc_stats(self, kw_ids: list[int]) -> Future:
-        return self._request(
-            {"op": "doc_stats", "kw_ids": [int(k) for k in kw_ids]}
-        )
+    def doc_stats(self, kw_ids: list[int], trace=None) -> Future:
+        msg = {"op": "doc_stats", "kw_ids": [int(k) for k in kw_ids]}
+        _stamp_trace(msg, trace)
+        return self._request(msg)
+
+    def health(self) -> tuple[int, int]:
+        """(configured, live) replica counts — one connection, dead or not."""
+        return 1, 0 if self._dead is not None else 1
 
     def stats(self) -> QueryStats:
         try:
@@ -236,6 +257,12 @@ class RpcWorker:
         return detail
 
     def _resolve(self, op: str, fut: Future, msg: dict, payload: bytes) -> None:
+        # traced requests carry their worker-side spans home in the reply
+        # header; adopt them into this process's tracer *before* resolving,
+        # so a caller that collects the trace after .result() sees them
+        spans = msg.get("spans")
+        if spans:
+            TRACER.adopt(spans)
         try:
             if not msg.get("ok", False):
                 fut.set_exception(
@@ -249,10 +276,18 @@ class RpcWorker:
             elif op == "doc_stats":
                 fut.set_result((load_array(payload), int(msg["full"])))
             elif op == "stats":
+                hist = msg.get("hist")
                 fut.set_result(
                     QueryStats(
                         data=dict(msg["data"]),
-                        latencies_ms=list(msg["latencies"]),
+                        latencies_ms=list(msg.get("latencies", ())),
+                        # new peers send the histogram (authoritative); an
+                        # old peer's sample window folds in via __post_init__
+                        **(
+                            {"hist": LatencyHistogram.from_dict(hist)}
+                            if hist
+                            else {}
+                        ),
                     )
                 )
             else:

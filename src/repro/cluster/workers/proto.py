@@ -10,6 +10,16 @@ vectors cross the link without pickling and parse straight back into
 numpy — the npy header carries dtype/shape, the JSON header carries
 everything else (request id, op, error info, scalar extras).
 
+Unknown JSON header fields are ignored by both sides, which is how the
+protocol evolves without version negotiation.  Two such optional fields
+carry distributed tracing (:mod:`repro.obs`): a traced request stamps
+``"tp"`` (a W3C-style traceparent string) on its header, and the reply to a
+traced request ships the worker-side span dicts home as ``"spans"`` (a
+list; the client adopts them into its local tracer).  Old peers on either
+side simply drop the fields — tracing degrades to "no remote spans", never
+to an error.  Traced stats replies similarly add ``"hist"`` (a serialized
+fixed-bucket latency histogram) next to the legacy ``"latencies"`` window.
+
 Both sides write whole frames under a lock and flush once, so frames never
 interleave; reads are blocking and a short read (EOF) returns ``(None,
 b"")`` — the peer is gone.  A frame whose *framing itself* is corrupt (a

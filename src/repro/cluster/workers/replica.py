@@ -36,6 +36,7 @@ from concurrent.futures import CancelledError, Future, InvalidStateError
 import numpy as np
 
 from repro.core.engine import QueryStats
+from repro.obs import TRACER
 
 from ..partition import ShardSpec
 from .base import Worker, WorkerDied
@@ -60,13 +61,14 @@ class _HedgedCall:
 
     __slots__ = (
         "rs", "call", "slots", "outer", "lock", "next_slot", "inflight",
-        "done", "timer", "t0", "inners", "last_exc", "failed_over",
+        "done", "timer", "t0", "inners", "last_exc", "failed_over", "parent",
     )
 
-    def __init__(self, rs: ReplicaSet, call, slots: list[int]):
+    def __init__(self, rs: ReplicaSet, call, slots: list[int], parent=None):
         self.rs = rs
         self.call = call
         self.slots = slots
+        self.parent = parent  # TraceContext/traceparent of the caller's span
         self.outer: Future = Future()
         self.lock = threading.Lock()
         self.next_slot = 0  # next index into slots to try
@@ -88,13 +90,15 @@ class _HedgedCall:
                     self.timer.start()
         return self.outer
 
-    def _launch_next(self) -> bool:
+    def _launch_next(self, kind: str = "first") -> bool:
         """Launch one attempt on the next untried replica.
 
         Returns True when an attempt went out.  Synchronous launch
         failures (dead replica) roll over to the next slot inline; when
         the slots are exhausted and nothing is in flight, the outer
-        Future fails with the last error seen.
+        Future fails with the last error seen.  Each attempt that goes
+        out (or fails synchronously) gets its own ``replica.attempt``
+        span annotated with how it was launched (first/hedge/failover).
         """
         while True:
             with self.lock:
@@ -106,21 +110,35 @@ class _HedgedCall:
                     self.done = True
                     exc = self.last_exc or self.rs._all_dead_error()
                     break
+                attempt = self.next_slot
                 slot = self.slots[self.next_slot]
                 self.next_slot += 1
                 self.inflight += 1
             worker = self.rs._worker_at(slot)
+            span = TRACER.start(
+                self.parent, "replica.attempt",
+                shard=self.rs.spec.index, slot=slot, attempt=attempt,
+                kind=kind,
+            )
             try:
-                inner = self.call(worker)
+                ctx = span.ctx
+                inner = (
+                    self.call(worker, ctx) if ctx is not None
+                    else self.call(worker, None)
+                )
             except Exception as e:
+                span.end(error=f"{type(e).__name__}: {e}")
                 self.rs._note_sync_failure(slot, e)
                 with self.lock:
                     self.inflight -= 1
                     self.last_exc = e
+                kind = "failover"
                 continue
             with self.lock:
                 self.inners.append(inner)
-            inner.add_done_callback(lambda f, s=slot: self._attempt_done(s, f))
+            inner.add_done_callback(
+                lambda f, s=slot, sp=span: self._attempt_done(s, f, sp)
+            )
             return True
         self._finish_exc(exc)
         return False
@@ -129,24 +147,30 @@ class _HedgedCall:
         with self.lock:
             if self.done or self.next_slot >= len(self.slots):
                 return
-        if self._launch_next():
+        if self._launch_next(kind="hedge"):
             self.rs._count("hedges_fired")
 
-    def _attempt_done(self, slot: int, f: Future) -> None:
+    def _attempt_done(self, slot: int, f: Future, span=None) -> None:
         try:
             exc = f.exception()
         except CancelledError:
+            if span is not None:
+                span.end(cancelled=True)  # the losing hedge attempt
             return  # we cancelled it as the loser
         if exc is None:
+            if span is not None:
+                span.end()
             self._win(slot, f.result())
             return
+        if span is not None:
+            span.end(error=f"{type(exc).__name__}: {exc}")
         with self.lock:
             self.inflight -= 1
             self.last_exc = exc
             if self.done:
                 return
             self.failed_over = True
-        if self._launch_next():
+        if self._launch_next(kind="failover"):
             self.rs._count("failovers")
 
     def _win(self, slot: int, result) -> None:
@@ -235,13 +259,31 @@ class ReplicaSet:
     # ------------------------------------------------------------------ #
     # Worker protocol
     # ------------------------------------------------------------------ #
-    def submit(self, keywords: list[str], semantics: str) -> Future:
-        return self._dispatch(lambda w: w.submit(keywords, semantics))
+    def submit(self, keywords: list[str], semantics: str, trace=None) -> Future:
+        # each attempt gets its own span ctx; trace= is only passed down
+        # when the attempt is actually traced, so replica fakes/stubs with
+        # the legacy two-arg signature keep working
+        def call(w, ctx):
+            if ctx is not None:
+                return w.submit(keywords, semantics, trace=ctx)
+            return w.submit(keywords, semantics)
 
-    def doc_stats(self, kw_ids: list[int]) -> Future:
+        return self._dispatch(call, trace)
+
+    def doc_stats(self, kw_ids: list[int], trace=None) -> Future:
         # hedged like submit: a stalled replica must not set the ELCA
         # residual's tail either
-        return self._dispatch(lambda w: w.doc_stats(kw_ids))
+        def call(w, ctx):
+            if ctx is not None:
+                return w.doc_stats(kw_ids, trace=ctx)
+            return w.doc_stats(kw_ids)
+
+        return self._dispatch(call, trace)
+
+    def health(self) -> tuple[int, int]:
+        """(configured, live) replica counts for this shard."""
+        with self._lock:
+            return len(self.replicas), sum(1 for ok in self._live if ok)
 
     def stats(self) -> QueryStats:
         with self._lock:
@@ -306,11 +348,11 @@ class ReplicaSet:
     # ------------------------------------------------------------------ #
     # Dispatch plumbing
     # ------------------------------------------------------------------ #
-    def _dispatch(self, call) -> Future:
+    def _dispatch(self, call, trace=None) -> Future:
         slots = self._pick_order()
         if not slots:
             raise self._all_dead_error()
-        return _HedgedCall(self, call, slots).start(self._hedge_delay_s())
+        return _HedgedCall(self, call, slots, trace).start(self._hedge_delay_s())
 
     def _pick_order(self) -> list[int]:
         """Live replica slots, rotated round-robin for load spreading."""

@@ -45,6 +45,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import BinaryIO
 
 from repro.core.engine import KeywordSearchEngine
+from repro.obs import TRACER
 from repro.serve.service import QueryService
 
 from ..partition import doc_roots
@@ -158,39 +159,62 @@ def serve_stream(
         try:
             if op == "submit":
                 _d, _eng, svc, _roots = state.parts()
+                # traced requests carry "tp"; the span parents everything
+                # this process records for the query, and the reply header
+                # ships the finished spans home (old clients ignore them)
+                sp = TRACER.start(
+                    msg.get("tp"), "worker.rpc", op="submit", pid=os.getpid()
+                )
 
-                def done(f, rid=rid):
+                def done(f, rid=rid, sp=sp):
                     exc = f.exception()
+                    sp.end()
+                    # the service recorded its spans before resolving the
+                    # Future, so collecting here sees the complete subtree
+                    spans = (
+                        TRACER.collect(sp.trace_id)
+                        if sp.ctx is not None
+                        else None
+                    )
                     if exc is None:
+                        hdr = {"id": rid, "op": "submit", "ok": True}
+                        if spans:
+                            hdr["spans"] = spans
                         try:
-                            reply(
-                                {"id": rid, "op": "submit", "ok": True},
-                                dump_array(f.result()),
-                            )
+                            reply(hdr, dump_array(f.result()))
                             return
                         except Exception as e:  # un-dumpable result
                             exc = e
-                    _fail(reply, rid, "submit", exc)
+                    _fail(reply, rid, "submit", exc, spans)
 
-                svc.submit(msg["keywords"], msg["semantics"]).add_done_callback(
-                    done
-                )
+                svc.submit(
+                    msg["keywords"], msg["semantics"], trace=sp.ctx
+                ).add_done_callback(done)
             elif op == "doc_stats":
                 _d, engine, _svc, roots = state.parts()
+                sp = TRACER.start(
+                    msg.get("tp"), "worker.rpc", op="doc_stats",
+                    pid=os.getpid(),
+                )
                 docs_k, full = shard_doc_stats(
                     engine.base.containment, roots, msg["kw_ids"]
                 )
-                reply(
-                    {"id": rid, "op": "doc_stats", "ok": True, "full": full},
-                    dump_array(docs_k),
-                )
+                sp.end()
+                hdr = {"id": rid, "op": "doc_stats", "ok": True, "full": full}
+                if sp.ctx is not None:
+                    spans = TRACER.collect(sp.trace_id)
+                    if spans:
+                        hdr["spans"] = spans
+                reply(hdr, dump_array(docs_k))
             elif op == "stats":
                 snap = state.svc.stats()
                 reply(
                     {
                         "id": rid, "op": "stats", "ok": True,
                         "data": snap.data,
+                        # kept for old clients; "hist" is authoritative
                         "latencies": snap.latencies_ms,
+                        "hist": snap.hist.to_dict(),
                     }
                 )
             elif op == "drain":
@@ -215,13 +239,16 @@ def serve_stream(
             _fail(reply, rid, op, e)
 
 
-def _fail(reply, rid: int, op: str, exc: BaseException) -> None:
-    reply(
-        {
-            "id": rid, "op": op, "ok": False,
-            "etype": type(exc).__name__, "error": str(exc),
-        }
-    )
+def _fail(
+    reply, rid: int, op: str, exc: BaseException, spans: list | None = None
+) -> None:
+    hdr = {
+        "id": rid, "op": op, "ok": False,
+        "etype": type(exc).__name__, "error": str(exc),
+    }
+    if spans:
+        hdr["spans"] = spans  # a failed traced request still returns its tree
+    reply(hdr)
 
 
 # ---------------------------------------------------------------------- #
@@ -267,8 +294,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--backend", default="jax")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--batch-window-ms", type=float, default=2.0)
+    ap.add_argument(
+        "--no-trace", action="store_true",
+        help="disable span recording on this worker (overhead benchmarks)",
+    )
     args = ap.parse_args(argv)
 
+    if args.no_trace:
+        TRACER.enabled = False
     state = EngineState(
         args.dir,
         backend=args.backend,

@@ -34,6 +34,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--backend", default="jax")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--batch-window-ms", type=float, default=2.0)
+    ap.add_argument(
+        "--no-trace", action="store_true",
+        help="disable span recording in this worker (overhead benchmarks)",
+    )
     args = ap.parse_args(argv)
 
     # Claim the RPC channel before the heavyweight imports: anything that
@@ -43,9 +47,13 @@ def main(argv: list[str] | None = None) -> int:
     os.dup2(sys.stderr.fileno(), sys.stdout.fileno())
     rpc_in = os.fdopen(os.dup(sys.stdin.fileno()), "rb")
 
+    from repro.obs import TRACER
+
     from .proto import write_frame
     from .server import EngineState, serve_stream
 
+    if args.no_trace:
+        TRACER.enabled = False
     state = EngineState(
         args.dir,
         backend=args.backend,

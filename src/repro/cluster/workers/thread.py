@@ -9,6 +9,7 @@ from __future__ import annotations
 from concurrent.futures import Future
 
 from repro.core.engine import KeywordSearchEngine, QueryStats
+from repro.obs import TRACER
 from repro.serve.service import QueryService
 
 from ..partition import ShardSpec, doc_roots
@@ -41,11 +42,12 @@ class ThreadWorker:
         # root), ascending — the probe set for doc_stats
         self._doc_roots = doc_roots(engine.tree)
 
-    def submit(self, keywords: list[str], semantics: str) -> Future:
-        return self.service.submit(keywords, semantics)
+    def submit(self, keywords: list[str], semantics: str, trace=None) -> Future:
+        return self.service.submit(keywords, semantics, trace=trace)
 
-    def doc_stats(self, kw_ids: list[int]) -> Future:
+    def doc_stats(self, kw_ids: list[int], trace=None) -> Future:
         fut: Future = Future()
+        span = TRACER.start(trace, "worker.doc_stats", shard=self.spec.index)
         try:
             fut.set_result(
                 shard_doc_stats(
@@ -53,8 +55,13 @@ class ThreadWorker:
                 )
             )
         except Exception as e:
+            span.annotate(error=f"{type(e).__name__}: {e}")
             fut.set_exception(e)
+        span.end()
         return fut
+
+    def health(self) -> tuple[int, int]:
+        return 1, 1 if self.service._thread.is_alive() else 0
 
     def stats(self) -> QueryStats:
         return self.service.stats()

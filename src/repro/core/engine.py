@@ -28,6 +28,7 @@ from repro.api import (
     validate_index,
     validate_semantics,
 )
+from repro.obs import TRACER, LatencyHistogram, emit_phases
 
 from . import io as index_io
 from . import search_base, search_vec
@@ -42,28 +43,48 @@ from .xml_tree import XMLTree, parse
 class QueryStats:
     """Diagnostics for the last query / batch / service window.
 
-    ``data`` carries per-call counters (rounds, launches, plan-cache hits);
-    ``latencies_ms`` accumulates per-query wall times when a caller (the
-    QueryService) records them — bounded to the most recent
-    ``MAX_LATENCIES`` so a long-lived service cannot grow without limit —
-    and ``summary()`` folds both into one dict with p50/p99.
+    ``data`` carries per-call counters (rounds, launches, plan-cache hits).
+    The latency store is ``hist``, a fixed-bucket
+    :class:`~repro.obs.metrics.LatencyHistogram`: O(#buckets) memory
+    however long the service lives, O(1) record, and percentiles that
+    weigh every sample since startup — the old ``np.percentile`` over a
+    half-trimmed sample list re-ranked up to 10k floats per ``to_dict()``
+    call and silently biased toward recent samples.  ``latencies_ms``
+    remains as a bounded recent-sample window (legacy callers index it;
+    :meth:`merge` still concatenates it), but no percentile math reads it
+    once the histogram has samples.
     """
 
     MAX_LATENCIES = 10_000
 
     data: dict = field(default_factory=dict)
     latencies_ms: list = field(default_factory=list)
+    hist: LatencyHistogram = field(default_factory=LatencyHistogram)
+
+    def __post_init__(self):
+        # legacy construction (old wire peers, tests) passes samples only:
+        # fold them so the histogram is authoritative from the start
+        if self.hist.count == 0 and self.latencies_ms:
+            for ms in self.latencies_ms:
+                self.hist.observe(float(ms))
 
     def record_latency(self, ms: float) -> None:
+        self.hist.observe(float(ms))
         if len(self.latencies_ms) >= self.MAX_LATENCIES:
             # amortized trim: drop the older half in one slice
             del self.latencies_ms[: self.MAX_LATENCIES // 2]
         self.latencies_ms.append(float(ms))
 
     def percentile(self, p: float) -> float:
-        if not self.latencies_ms:
+        if self.hist.count:
+            return self.hist.percentile(p)
+        if not self.latencies_ms:  # hist empty, window assigned post-init
             return 0.0
         return float(np.percentile(np.asarray(self.latencies_ms), p))
+
+    @property
+    def queries_timed(self) -> int:
+        return self.hist.count if self.hist.count else len(self.latencies_ms)
 
     def to_dict(self) -> dict:
         """The one stats schema: counters + (when timed) latency percentiles.
@@ -73,8 +94,9 @@ class QueryStats:
         gateway's ``/stats`` JSON can read a worker's local stats unchanged.
         """
         out = dict(self.data)
-        if self.latencies_ms:
-            out["queries_timed"] = len(self.latencies_ms)
+        timed = self.queries_timed
+        if timed:
+            out["queries_timed"] = timed
             out["p50_ms"] = round(self.percentile(50), 3)
             out["p99_ms"] = round(self.percentile(99), 3)
         return out
@@ -91,8 +113,9 @@ class QueryStats:
         (summing them is nonsense) so they are recomputed from the merged
         counters where possible — ``plan_hit_rate`` from hits/launches —
         and dropped otherwise.  Non-numeric values keep the first
-        occurrence; latency samples concatenate (still bounded by
-        ``record_latency`` on later appends).
+        occurrence.  Latency histograms merge bucket-wise (exact, unlike
+        concatenating bounded sample lists); the legacy sample windows
+        still concatenate for callers that read them directly.
         """
         merged = cls()
         for part in parts:
@@ -103,6 +126,10 @@ class QueryStats:
                     merged.data.setdefault(key, val)
                 else:
                     merged.data[key] = merged.data.get(key, 0) + val
+            if part.hist.count:
+                merged.hist.merge(part.hist)
+            elif part.latencies_ms:  # window assigned after construction
+                merged.hist.merge(LatencyHistogram.from_samples(part.latencies_ms))
             merged.latencies_ms.extend(part.latencies_ms)
         launches = merged.data.get("plan_launches_total", 0)
         if launches:
@@ -191,13 +218,22 @@ class KeywordSearchEngine:
         """
         if isinstance(keywords, Query):
             q = keywords.validate()
+            span = TRACER.start(
+                q.traceparent, "engine.query",
+                semantics=q.semantics, index=q.index,
+                backend=q.backend or "scalar",
+            )
+            phases = [] if span.ctx is not None else None
             t0 = time.perf_counter()
             ids = self._query(
                 list(q.keywords), q.semantics, q.index, q.backend or "scalar",
-                algorithm,
+                algorithm, phases=phases,
             )
             stats = self.last_stats.to_dict()
             stats["latency_ms"] = round((time.perf_counter() - t0) * 1e3, 3)
+            if phases:
+                emit_phases(span.ctx, phases)
+            span.end()
             return QueryResult(ids=ids, stats=stats, generations=())
         return self._query(keywords, semantics, index, backend, algorithm)
 
@@ -208,6 +244,7 @@ class KeywordSearchEngine:
         index: str,
         backend: str,
         algorithm: str | None,
+        phases: list | None = None,
     ) -> np.ndarray:
         # validate *before* the unknown-keyword early return — a bogus
         # semantics/index/backend is a caller bug and must raise even when
@@ -252,6 +289,7 @@ class KeywordSearchEngine:
                 backend="pallas" if backend == "pallas" else "xla",
                 stats=self.last_stats.data,
                 plan=self.plan_cache,
+                phases=phases,
             )
         raise ValueError(f"index must be tree|dag, got {index!r}")
 

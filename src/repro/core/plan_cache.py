@@ -20,6 +20,7 @@ counters feed ``QueryStats`` and the service benchmarks.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
@@ -151,27 +152,57 @@ class PlanCache:
         keys: list,
         semantics: str = "slca",
         backend: str | None = None,
+        phases: list | None = None,
     ) -> dict:
         """Search every work item in one (bucketed) launch.
 
         Returns {key: sorted int64 result ids} for *every* input key; items
         dropped at packing (an empty list => empty intersection) map to the
         empty result.
+
+        ``phases`` (when a traced query asks for timing) collects
+        ``{"name", "t0_ms", "dur_ms", "attrs"}`` dicts for the pack step
+        and the kernel launch — the per-phase spans the tracing layer
+        attaches under the query's execute span.  ``None`` (every untraced
+        call) skips all timing work.
         """
         backend = backend or self.backend
         out = {key: _EMPTY for key in keys}
+        if phases is not None:
+            w0, p0 = time.time() * 1e3, time.perf_counter()
         batch, kept, sig = self.pack(per_item, keys, semantics, backend)
         if batch is None:
             return out
         if sig in self._seen:
             self.hits += 1
+            hit = True
         else:
             self._seen.add(sig)
             self.misses += 1
+            hit = False
         self.launches += 1
+        if phases is not None:
+            p1 = time.perf_counter()
+            phases.append({
+                "name": "plan.pack", "t0_ms": w0, "dur_ms": (p1 - p0) * 1e3,
+                "attrs": {
+                    "rows": sig.rows, "k": sig.k, "m0": sig.m0, "mo": sig.mo,
+                    "plan_hit": hit,
+                },
+            })
+            w1 = time.time() * 1e3
         ids, mask = ca_search_batch(**batch, semantics=semantics, backend=backend)
         ids = np.asarray(ids)
         mask = np.asarray(mask)
+        if phases is not None:
+            phases.append({
+                "name": "kernel.ca_search",
+                "t0_ms": w1, "dur_ms": (time.perf_counter() - p1) * 1e3,
+                "attrs": {
+                    "backend": backend, "semantics": semantics,
+                    "rows": sig.rows,
+                },
+            })
         for r, key in enumerate(kept):
             out[key] = ids[r][mask[r]].astype(np.int64)
         return out

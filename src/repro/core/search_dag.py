@@ -9,6 +9,8 @@ RCPM offsets is host-side numpy (data movement, not compute).
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from .components import IDClusterIndex
@@ -34,8 +36,14 @@ def dag_search_vec(
     backend: str = "xla",
     stats: dict | None = None,
     plan: PlanCache | None = None,
+    phases: list | None = None,
 ) -> np.ndarray:
-    """Frontier-batched DAG search; returns sorted original node ids."""
+    """Frontier-batched DAG search; returns sorted original node ids.
+
+    ``phases`` (traced queries only) collects per-phase timing dicts from
+    the plan cache's pack/launch steps — and from the per-RC pallas
+    dispatch loop, which runs outside the plan cache.
+    """
     plan = _plan_or_default(plan)
     launches0 = plan.launches
     pallas_launches = 0
@@ -47,6 +55,8 @@ def dag_search_vec(
         if backend == "pallas":
             from repro.kernels import ops as kernel_ops  # lazy: avoid cycle
 
+            if phases is not None:
+                w0, p0 = time.time() * 1e3, time.perf_counter()
             results = {
                 rc: kernel_ops.run_query_pallas(
                     index.idlists(rc, kws), semantics=semantics
@@ -54,12 +64,20 @@ def dag_search_vec(
                 for rc in frontier
             }
             pallas_launches += len(frontier)
+            if phases is not None:
+                phases.append({
+                    "name": "kernel.pallas_round",
+                    "t0_ms": w0,
+                    "dur_ms": (time.perf_counter() - p0) * 1e3,
+                    "attrs": {"rcs": len(frontier), "round": rounds},
+                })
         else:
             results = plan.run(
                 [index.idlists(rc, kws) for rc in frontier],
                 frontier,
                 semantics=semantics,
                 backend=backend,
+                phases=phases,
             )
         nxt: list[int] = []
         for rc in frontier:
@@ -91,6 +109,7 @@ def dag_search_vec_multi(
     backend: str = "xla",
     stats: dict | None = None,
     plan: PlanCache | None = None,
+    phases: list | None = None,
 ) -> list[np.ndarray]:
     """Serve a *batch* of queries: one device launch per frontier round.
 
@@ -121,7 +140,10 @@ def dag_search_vec_multi(
         nxt: list[tuple[int, int]] = []
         for _, items in by_k.items():
             per_item = [index.idlists(rc, queries[qi]) for qi, rc in items]
-            results = plan.run(per_item, items, semantics=semantics, backend=backend)
+            results = plan.run(
+                per_item, items, semantics=semantics, backend=backend,
+                phases=phases,
+            )
             for qi, rc in items:
                 res = results[(qi, rc)]
                 memos[qi][rc] = res

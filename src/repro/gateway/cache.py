@@ -81,11 +81,13 @@ class EdgeCache:
 
     def snapshot(self) -> dict:
         with self._lock:
+            lookups = self.hits + self.misses
             return {
                 "entries": len(self._entries),
                 "max_entries": self.max_entries,
                 "hits": self.hits,
                 "misses": self.misses,
+                "hit_rate": round(self.hits / lookups, 4) if lookups else 0.0,
                 "invalidations": self.invalidations,
                 "evictions": self.evictions,
             }

@@ -5,14 +5,29 @@ Routes:
   * ``POST /query``  — body is a :class:`repro.api.Query` JSON object
     (``{"keywords": "vinyl reissue", "semantics": "slca"}``); the
     response is the :class:`repro.api.QueryResult` shape plus a
-    ``cached`` flag::
+    ``cached`` flag (and a ``trace_id`` when the request was traced)::
 
         {"ids": [...], "stats": {...}, "generations": [...], "cached": false}
 
   * ``GET /stats``   — the cluster rollup in the one
     :meth:`~repro.core.engine.QueryStats.to_dict` schema under
     ``service``, gateway counters + cache snapshot under ``gateway``;
-  * ``GET /healthz`` — liveness + shard count + generation vector.
+  * ``GET /healthz`` — readiness: shard count, generation vector, and
+    (when the service reports ``shard_health``) per-shard replica
+    liveness — 503 while any shard has zero live replicas;
+  * ``GET /metrics`` — the gateway's :class:`~repro.obs.MetricsRegistry`
+    in the Prometheus text exposition format (request/query/error
+    counters, cache gauges, latency histograms, service rollup);
+  * ``GET /debug/slow?n=10`` — the ``n`` slowest recent queries with
+    their assembled span trees (see :mod:`repro.obs.trace`).
+
+Tracing: every ``POST /query`` opens a root span when tracing is on
+(honoring an incoming W3C-style ``traceparent`` header), propagates the
+context through the service via :meth:`repro.api.Query.with_trace`, and —
+once the result future resolves — collects the whole span tree (local
+layers plus the spans remote workers shipped back over the RPC) into the
+slow-query log.  The response carries ``trace_id`` so a client can
+correlate.
 
 Error mapping: bad JSON / unknown fields / bad semantics → 400 (the
 ``Query.from_dict`` validation path), admission shed
@@ -35,10 +50,13 @@ from __future__ import annotations
 import asyncio
 import json
 import threading
+import time
+from urllib.parse import parse_qs
 
 from repro.api import Query
 from repro.cluster.admission import Overloaded
 from repro.cluster.workers import WorkerDied
+from repro.obs import NULL_SPAN, TRACER, MetricsRegistry, SlowQueryLog
 
 from .cache import EdgeCache
 
@@ -77,6 +95,8 @@ class Gateway:
         cache_entries: int = 1024,
         request_timeout: float | None = None,
         own_service: bool = False,
+        trace: bool = True,
+        slow_log_entries: int = 256,
     ):
         self.service = service
         self.cache = EdgeCache(cache_entries)
@@ -90,6 +110,21 @@ class Gateway:
         self._own_service = own_service
         self._lock = threading.Lock()
         self.counters = {"requests": 0, "queries": 0, "errors": 0}
+        # per-query tracing at this gateway (workers honor whatever context
+        # actually arrives, so this is the one switch that matters end to end)
+        self.trace = bool(trace)
+        self.slow_log = SlowQueryLog(slow_log_entries)
+        self.registry = MetricsRegistry(prefix="xks_")
+        self._metric_counters = {
+            k: self.registry.counter(
+                f"gateway_{k}_total", f"gateway {k} since startup"
+            )
+            for k in self.counters
+        }
+        self._m_latency = self.registry.histogram(
+            "gateway_request_latency_ms",
+            "end-to-end POST /query latency at the gateway (ms)",
+        )
         self._loop: asyncio.AbstractEventLoop | None = None
         self._server: asyncio.AbstractServer | None = None
         self._thread: threading.Thread | None = None
@@ -185,7 +220,7 @@ class Gateway:
                 keep = headers.get("connection", "").lower() != "close"
                 self._count("requests")
                 try:
-                    status, obj = await self._route(method, path, body)
+                    status, obj = await self._route(method, path, headers, body)
                 except HttpError as e:
                     self._count("errors")
                     status, obj = e.status, {"error": e.message}
@@ -232,11 +267,16 @@ class Gateway:
         body = await reader.readexactly(n) if n > 0 else b""
         return method, path, headers, body
 
-    async def _respond(self, writer, status: int, obj: dict, keep: bool):
-        body = json.dumps(obj).encode()
+    async def _respond(self, writer, status: int, obj, keep: bool):
+        if isinstance(obj, str):  # /metrics: Prometheus text exposition
+            body = obj.encode()
+            ctype = "text/plain; version=0.0.4; charset=utf-8"
+        else:
+            body = json.dumps(obj).encode()
+            ctype = "application/json"
         head = (
             f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}\r\n"
-            "Content-Type: application/json\r\n"
+            f"Content-Type: {ctype}\r\n"
             f"Content-Length: {len(body)}\r\n"
             f"Connection: {'keep-alive' if keep else 'close'}\r\n"
             "\r\n"
@@ -247,27 +287,56 @@ class Gateway:
     # ------------------------------------------------------------------ #
     # Routes
     # ------------------------------------------------------------------ #
-    async def _route(self, method: str, path: str, body: bytes):
-        path = path.split("?", 1)[0]
+    async def _route(self, method: str, path: str, headers: dict, body: bytes):
+        path, _, qs = path.partition("?")
         if path == "/query":
             if method != "POST":
                 raise HttpError(405, "POST /query")
-            return await self._query(body)
+            return await self._query(headers, body)
         if path == "/stats":
             if method != "GET":
                 raise HttpError(405, "GET /stats")
             return await self._stats()
+        if path == "/metrics":
+            if method != "GET":
+                raise HttpError(405, "GET /metrics")
+            return await self._metrics()
+        if path == "/debug/slow":
+            if method != "GET":
+                raise HttpError(405, "GET /debug/slow")
+            try:
+                n = int(parse_qs(qs).get("n", ["10"])[0])
+            except (ValueError, IndexError):
+                n = 10
+            return 200, {
+                "entries": len(self.slow_log),
+                "slowest": self.slow_log.worst(n),
+            }
         if path == "/healthz":
             if method != "GET":
                 raise HttpError(405, "GET /healthz")
-            return 200, {
-                "ok": True,
-                "shards": self.service.num_shards,
-                "generations": list(self.service.generation_vector()),
-            }
+            return self._healthz()
         raise HttpError(404, f"no route {path!r}")
 
-    async def _query(self, body: bytes):
+    def _healthz(self):
+        out = {
+            "ok": True,
+            "shards": self.service.num_shards,
+            "generations": list(self.service.generation_vector()),
+        }
+        health = getattr(self.service, "shard_health", None)
+        if callable(health):
+            rows = health()
+            out["replicas"] = rows
+            down = [r for r in rows if r.get("replicas_live", 0) <= 0]
+            if down:
+                # a shard with zero live replicas cannot answer: not ready
+                out["ok"] = False
+                out["down_shards"] = [r["shard"] for r in down]
+                return 503, out
+        return 200, out
+
+    async def _query(self, headers: dict, body: bytes):
         try:
             obj = json.loads(body.decode() or "null")
         except (ValueError, UnicodeDecodeError) as e:
@@ -277,33 +346,90 @@ class Gateway:
         except ValueError as e:
             raise HttpError(400, str(e)) from e
         self._count("queries")
+        t0 = time.perf_counter()
+        # root span: a fresh trace, or a child of the client's traceparent
+        # header (or of the one already on the query body)
+        span = (
+            TRACER.root(
+                "gateway.request",
+                traceparent=headers.get("traceparent") or q.traceparent,
+                semantics=q.semantics,
+            )
+            if self.trace
+            else NULL_SPAN
+        )
+        if span.ctx is not None:
+            q = q.with_trace(span.ctx.traceparent)
         # generation stamp BEFORE submit: a reload landing mid-flight makes
         # the stamp conservative (entry invalidates early, never serves
         # stale) — see cache.py
         gens = self.service.generation_vector()
+        csp = TRACER.start(span.ctx, "gateway.cache")
         hit = self.cache.get(q.cache_key, gens)
+        csp.end(hit=hit is not None)
         if hit is not None:
-            return 200, dict(hit, cached=True)
+            out = dict(hit, cached=True)
+            self._finish_request(span, out, t0, q, cached=True)
+            return 200, out
         touched = self.service.touched(list(q.keywords))
         try:
             fut = self.service.submit(q)
         except Overloaded as e:
+            self._abort_trace(span, "Overloaded")
             raise HttpError(429, str(e)) from e
         except ValueError as e:
+            self._abort_trace(span, f"ValueError: {e}")
             raise HttpError(400, str(e)) from e
         try:
             res = await asyncio.wait_for(
                 asyncio.wrap_future(fut), self.request_timeout
             )
         except WorkerDied as e:
+            self._abort_trace(span, f"WorkerDied: {e}")
             raise HttpError(503, str(e)) from e
         except asyncio.TimeoutError as e:
+            self._abort_trace(span, "timeout")
             raise HttpError(
                 504, f"query exceeded {self.request_timeout}s"
             ) from e
         payload = res.to_dict()
         self.cache.put(q.cache_key, payload, touched, gens)
-        return 200, dict(payload, cached=False)
+        out = dict(payload, cached=False)
+        self._finish_request(span, out, t0, q, cached=False)
+        return 200, out
+
+    def _finish_request(self, span, out: dict, t0: float, q: Query,
+                        cached: bool) -> None:
+        """Close the request span, assemble its tree, log + measure.
+
+        Every layer below recorded its spans before the result future
+        resolved (and remote spans were adopted from the RPC reply), so
+        collecting here sees the complete cross-process tree.
+        """
+        lat = (time.perf_counter() - t0) * 1e3
+        self._m_latency.observe(lat)
+        if span.ctx is None:
+            return
+        span.end(cached=cached)
+        spans = TRACER.collect(span.trace_id)
+        out["trace_id"] = span.trace_id
+        self.slow_log.add(
+            {
+                "trace_id": span.trace_id,
+                "latency_ms": round(lat, 3),
+                "keywords": list(q.keywords),
+                "semantics": q.semantics,
+                "cached": cached,
+                "spans": TRACER.build_tree(spans),
+            }
+        )
+
+    def _abort_trace(self, span, error: str) -> None:
+        """End + discard a failed request's trace (never block the error)."""
+        if span.ctx is None:
+            return
+        span.end(error=error)
+        TRACER.collect(span.trace_id)  # pop: keep the store tidy
 
     async def _stats(self):
         # per-worker stats collection blocks on RPC round-trips: keep the
@@ -320,6 +446,41 @@ class Gateway:
             "generations": list(self.service.generation_vector()),
         }
 
+    async def _metrics(self):
+        snap = await asyncio.get_running_loop().run_in_executor(
+            None, self.service.stats
+        )
+        self._sync_registry(snap)
+        return 200, self.registry.expose()
+
+    def _sync_registry(self, snap) -> None:
+        """Mirror scrape-time state into the registry (gauges + rollups).
+
+        Counters the gateway increments live in the registry already; the
+        edge cache and the service rollup are snapshotted at scrape, and
+        the service's latency histogram is adopted wholesale — same bucket
+        edges end to end, so Prometheus sees true cumulative buckets.
+        """
+        for k, v in self.cache.snapshot().items():
+            self.registry.gauge(
+                f"gateway_cache_{k}", f"edge cache {k}"
+            ).set(float(v))
+        for k, v in snap.data.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue  # transport names, generation vectors, ...
+            self.registry.gauge(
+                f"cluster_{k}", f"service rollup counter {k}"
+            ).set(float(v))
+        hist = getattr(snap, "hist", None)
+        if hist is not None:
+            self.registry.histogram(
+                "cluster_query_latency_ms",
+                "routed query latency as recorded by the service (ms)",
+            ).replace(hist)
+
     def _count(self, key: str) -> None:
         with self._lock:
             self.counters[key] += 1
+        m = self._metric_counters.get(key)
+        if m is not None:
+            m.inc()

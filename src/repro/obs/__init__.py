@@ -1,0 +1,57 @@
+"""Observability: per-query distributed tracing + the metrics registry.
+
+Two halves, both stdlib + numpy only:
+
+  * :mod:`repro.obs.trace` — opt-in per-query spans propagated on a
+    W3C-style ``traceparent``, recorded in the process-local
+    :data:`TRACER`, shipped across the worker RPC in reply headers, and
+    assembled into one span tree at the gateway (which also keeps the
+    bounded :class:`SlowQueryLog` behind ``GET /debug/slow``);
+  * :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket
+    :class:`LatencyHistogram`\\ s behind a :class:`MetricsRegistry` with
+    Prometheus text exposition (``GET /metrics``).  The histogram is also
+    ``QueryStats``' latency store, replacing the unbounded sample list.
+"""
+from .metrics import (
+    DEFAULT_BUCKETS_MS,
+    Counter,
+    Gauge,
+    Histogram,
+    LatencyHistogram,
+    MetricsRegistry,
+    sanitize_metric_name,
+)
+from .trace import (
+    NULL_SPAN,
+    TRACER,
+    SlowQueryLog,
+    Span,
+    TraceContext,
+    Tracer,
+    emit_phases,
+    make_traceparent,
+    new_span_id,
+    new_trace_id,
+    parse_traceparent,
+)
+
+__all__ = [
+    "DEFAULT_BUCKETS_MS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LatencyHistogram",
+    "MetricsRegistry",
+    "NULL_SPAN",
+    "SlowQueryLog",
+    "Span",
+    "TRACER",
+    "TraceContext",
+    "Tracer",
+    "emit_phases",
+    "make_traceparent",
+    "new_span_id",
+    "new_trace_id",
+    "parse_traceparent",
+    "sanitize_metric_name",
+]

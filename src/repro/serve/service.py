@@ -42,6 +42,7 @@ from repro.api import Query, QueryResult, chain_future, validate_backend, valida
 from repro.core.engine import KeywordSearchEngine, QueryStats
 from repro.core.search_base import dag_search
 from repro.core.search_dag import dag_search_vec_multi
+from repro.obs import TRACER, emit_phases
 
 # drain backends: how one admission window reaches the index.  "jax" and
 # "pallas" both run the batched vectorized search through the engine's
@@ -57,6 +58,7 @@ class _Pending:
     semantics: str
     future: Future
     t_submit: float = field(default_factory=time.perf_counter)
+    trace: object = None  # TraceContext | traceparent str | None
 
 
 class QueryService:
@@ -100,19 +102,27 @@ class QueryService:
     # Admission
     # ------------------------------------------------------------------ #
     def submit(
-        self, keywords: list[str] | str | Query, semantics: str = "slca"
+        self,
+        keywords: list[str] | str | Query,
+        semantics: str = "slca",
+        trace=None,
     ) -> Future:
         """Enqueue one query; the Future resolves when its window drains.
 
         Pass a :class:`repro.api.Query` for a ``Future[QueryResult]``; the
         legacy ``(keywords, semantics)`` form is deprecated and resolves to
-        the bare sorted original node ids.
+        the bare sorted original node ids.  ``trace`` (a traceparent string
+        or :class:`~repro.obs.TraceContext`) parents the per-query
+        queued/execute/phase spans the drain emits.
         """
         if isinstance(keywords, Query):
             return self._submit_query(keywords)
         validate_semantics(semantics)
         fut: Future = Future()
-        item = _Pending(self.engine.keyword_ids(keywords), semantics, fut)
+        item = _Pending(
+            self.engine.keyword_ids(keywords), semantics, fut,
+            trace=trace if TRACER.enabled else None,
+        )
         with self._wake:
             # the closed check lives under the same lock close() takes, so a
             # submit racing close() either lands in the final drain window or
@@ -147,7 +157,10 @@ class QueryService:
             lat = round((time.perf_counter() - t0) * 1e3, 3)
             return QueryResult(ids=ids, stats={"latency_ms": lat}, generations=())
 
-        return chain_future(self.submit(list(q.keywords), q.semantics), finish)
+        return chain_future(
+            self.submit(list(q.keywords), q.semantics, trace=q.traceparent),
+            finish,
+        )
 
     def query(
         self, keywords: list[str] | str | Query, semantics: str = "slca"
@@ -177,6 +190,7 @@ class QueryService:
             snap = QueryStats(
                 data=dict(self._stats.data),
                 latencies_ms=list(self._stats.latencies_ms),
+                hist=self._stats.hist.copy(),
             )
             snap.data["queue_depth"] = len(self._pending)
         snap.data.update(self.engine.plan_cache.snapshot())
@@ -256,6 +270,13 @@ class QueryService:
             pass
 
     def _run_group(self, semantics: str, items: list[_Pending]) -> None:
+        traced = (
+            [it for it in items if it.trace is not None]
+            if TRACER.enabled
+            else []
+        )
+        phases: list | None = [] if traced else None
+        t_run = time.perf_counter()
         try:
             if self.backend == "scalar":
                 results = [
@@ -273,10 +294,45 @@ class QueryService:
                     semantics=semantics,
                     backend=_BACKENDS[self.backend],
                     plan=self.engine.plan_cache,
+                    phases=phases,
                 )
         except Exception as e:  # surface the failure on every waiter
             for it in items:
                 self._deliver(it.future, exc=e)
             return
+        if traced:
+            # spans are recorded BEFORE futures resolve, so a caller that
+            # collects the trace right after .result() sees the full tree
+            self._emit_spans(semantics, items, traced, phases, t_run)
         for it, res in zip(items, results):
             self._deliver(it.future, result=res)
+
+    def _emit_spans(
+        self,
+        semantics: str,
+        items: list[_Pending],
+        traced: list[_Pending],
+        phases: list | None,
+        t_run: float,
+    ) -> None:
+        """Execute (+ engine phase) spans for each traced item.
+
+        Wall-clock anchors are reconstructed from the perf-counter stamps
+        (``wall_now - perf_elapsed``), so span timestamps line up with the
+        phase timings captured inside the drain.  Queueing shows up as a
+        ``queued_ms`` attribute rather than its own span — one span per
+        item per batch keeps the traced hot path inside the overhead
+        budget compare.py gates.
+        """
+        now_perf = time.perf_counter()
+        now_wall = time.time() * 1e3
+        t0_ms = now_wall - (now_perf - t_run) * 1e3
+        dur_ms = (now_perf - t_run) * 1e3
+        for it in traced:
+            ectx = TRACER.emit(
+                it.trace, "service.execute", t0_ms, dur_ms,
+                batch=len(items), semantics=semantics, backend=self.backend,
+                queued_ms=round((t_run - it.t_submit) * 1e3, 3),
+            )
+            if phases and ectx is not None:
+                emit_phases(ectx, phases)

@@ -211,7 +211,12 @@ def test_http_404_405(gateway):
 def test_http_healthz_and_stats(gateway):
     status, health = _req(gateway, "GET", "/healthz")
     assert status == 200
-    assert health == {"ok": True, "shards": 2, "generations": [0, 0]}
+    assert health["ok"] is True
+    assert health["shards"] == 2
+    assert health["generations"] == [0, 0]
+    # readiness detail: every shard reports at least one live replica
+    assert [r["shard"] for r in health["replicas"]] == [0, 1]
+    assert all(r["replicas_live"] >= 1 for r in health["replicas"])
 
     _req(gateway, "POST", "/query", {"keywords": "vinyl"})
     _req(gateway, "POST", "/query", {"keywords": "vinyl"})

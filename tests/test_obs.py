@@ -1,0 +1,489 @@
+"""Observability: tracing, metrics, Prometheus exposition, span trees.
+
+Three layers of coverage:
+
+  * unit — traceparent parsing, the Tracer span store, the fixed-bucket
+    latency histogram (the store that replaced the unbounded
+    ``latencies_ms`` window), the metrics registry's exposition format,
+    and the slow-query log;
+  * schema — every serving layer (service, cluster, gateway) emits the
+    same latency-summary field names, and every registry metric appears
+    in ``GET /metrics``;
+  * end-to-end — one traced HTTP query over the *process* transport
+    (replicated shards) and over the *remote* transport (real sockets)
+    yields a single-trace span tree spanning gateway → cache → router →
+    replica attempt → worker RPC → service batch → engine kernel phases,
+    with every span carrying the same trace id across process boundaries.
+"""
+import http.client
+import json
+import re
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterService
+from repro.data import generate_discogs_tree
+from repro.gateway import Gateway
+from repro.obs import (
+    DEFAULT_BUCKETS_MS,
+    LatencyHistogram,
+    MetricsRegistry,
+    SlowQueryLog,
+    TraceContext,
+    Tracer,
+    make_traceparent,
+    new_span_id,
+    new_trace_id,
+    parse_traceparent,
+)
+from repro.serve import QueryService
+
+N_RELEASES = 16
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_discogs_tree(n_releases=N_RELEASES, seed=5)
+
+
+def _req(gw, method, path, body=None, headers=None):
+    conn = http.client.HTTPConnection(gw.host, gw.port, timeout=120)
+    try:
+        payload = None if body is None else json.dumps(body)
+        conn.request(method, path, body=payload, headers=headers or {})
+        resp = conn.getresponse()
+        raw = resp.read().decode()
+        ctype = resp.getheader("Content-Type", "")
+        if ctype.startswith("application/json"):
+            return resp.status, json.loads(raw)
+        return resp.status, raw
+    finally:
+        conn.close()
+
+
+# --------------------------------------------------------------------------- #
+# traceparent parsing
+# --------------------------------------------------------------------------- #
+
+
+def test_traceparent_round_trip():
+    tid, sid = new_trace_id(), new_span_id()
+    tp = make_traceparent(tid, sid)
+    ctx = parse_traceparent(tp)
+    assert ctx == TraceContext(tid, sid)
+    assert ctx.traceparent == tp
+    # a TraceContext passes through unchanged
+    assert parse_traceparent(ctx) is ctx
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        None,
+        42,
+        "",
+        "not-a-traceparent",
+        "00-abc-def-01",  # wrong lengths
+        "00-" + "g" * 32 + "-" + "1" * 16 + "-01",  # non-hex
+        "00-" + "0" * 32 + "-" + "1" * 16 + "-01",  # all-zero trace id
+        "00-" + "1" * 32 + "-" + "0" * 16 + "-01",  # all-zero span id
+        "00-" + "1" * 32 + "-" + "1" * 16,  # missing flags
+        "00-" + "1" * 32 + "-" + "1" * 16 + "-01-extra",
+    ],
+)
+def test_traceparent_malformed_is_untraced(bad):
+    assert parse_traceparent(bad) is None
+
+
+# --------------------------------------------------------------------------- #
+# Tracer span store
+# --------------------------------------------------------------------------- #
+
+
+def test_tracer_records_and_collects_a_tree():
+    tr = Tracer()
+    root = tr.root("request")
+    child = tr.start(root.ctx, "route", shard=3)
+    child.end()
+    root.end(ok=True)
+    spans = tr.collect(root.trace_id)
+    assert len(spans) == 2
+    assert {s["trace_id"] for s in spans} == {root.trace_id}
+    tree = Tracer.build_tree(spans)
+    assert len(tree) == 1 and tree[0]["name"] == "request"
+    assert [c["name"] for c in tree[0]["children"]] == ["route"]
+    assert tree[0]["children"][0]["attrs"]["shard"] == 3
+    # collect pops: the store is empty afterwards
+    assert tr.collect(root.trace_id) == []
+
+
+def test_tracer_disabled_and_unparented_are_free():
+    tr = Tracer()
+    assert tr.start(None, "x").ctx is None
+    assert tr.start("garbage", "x").ctx is None
+    tr.enabled = False
+    sp = tr.root("x")
+    assert sp.ctx is None
+    sp.end()  # no-op, records nothing
+    assert len(tr) == 0
+
+
+def test_tracer_adopt_merges_remote_spans():
+    local, remote = Tracer(), Tracer()
+    root = local.root("gateway")
+    rsp = remote.start(root.ctx, "worker.rpc")
+    rsp.end()
+    local.adopt(remote.collect(root.trace_id))
+    root.end()
+    spans = local.collect(root.trace_id)
+    assert {s["name"] for s in spans} == {"gateway", "worker.rpc"}
+    tree = Tracer.build_tree(spans)
+    assert tree[0]["children"][0]["name"] == "worker.rpc"
+
+
+def test_tracer_orphans_surface_as_forest_roots():
+    tr = Tracer()
+    ctx = TraceContext(new_trace_id(), new_span_id())
+    tr.emit(ctx, "stranded", 1.0, 2.0)  # parent span never recorded
+    tree = Tracer.build_tree(tr.collect(ctx.trace_id))
+    assert [t["name"] for t in tree] == ["stranded"]
+
+
+def test_tracer_store_is_bounded_lru():
+    tr = Tracer(max_traces=4)
+    ids = []
+    for _ in range(10):
+        sp = tr.root("r")
+        sp.end()
+        ids.append(sp.trace_id)
+    assert len(tr) == 4
+    assert tr.collect(ids[0]) == []  # oldest evicted
+    assert tr.collect(ids[-1]) != []
+
+
+# --------------------------------------------------------------------------- #
+# LatencyHistogram
+# --------------------------------------------------------------------------- #
+
+
+def test_histogram_percentiles_monotone_and_positive():
+    h = LatencyHistogram()
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=1.0, sigma=1.0, size=2000)
+    for s in samples:
+        h.observe(float(s))
+    assert h.count == 2000
+    ps = [h.percentile(p) for p in (1, 25, 50, 75, 95, 99, 100)]
+    assert all(a <= b for a, b in zip(ps, ps[1:]))  # monotone in p
+    assert ps[0] > 0.0  # strictly positive once observed
+    # the estimate lands within the right bucket of the true percentile
+    true_p50 = float(np.percentile(samples, 50))
+    i = int(np.searchsorted(DEFAULT_BUCKETS_MS, true_p50, side="left"))
+    lo = DEFAULT_BUCKETS_MS[i - 1] if i > 0 else 0.0
+    hi = DEFAULT_BUCKETS_MS[min(i, len(DEFAULT_BUCKETS_MS) - 1)]
+    assert lo <= h.percentile(50) <= hi
+
+
+def test_histogram_empty_overflow_and_single():
+    h = LatencyHistogram()
+    assert h.percentile(50) == 0.0
+    h.observe(1e9)  # beyond the last edge: overflow bucket
+    assert h.percentile(50) == DEFAULT_BUCKETS_MS[-1]
+    one = LatencyHistogram()
+    one.observe(3.0)
+    assert 0.0 < one.percentile(1) <= 5.0
+    assert one.percentile(1) <= one.percentile(99)
+
+
+def test_histogram_merge_equals_union():
+    a, b = LatencyHistogram(), LatencyHistogram()
+    both = LatencyHistogram()
+    for v in (0.5, 3.0, 40.0):
+        a.observe(v)
+        both.observe(v)
+    for v in (7.0, 7.0, 900.0):
+        b.observe(v)
+        both.observe(v)
+    a.merge(b)
+    assert a.counts == both.counts
+    assert a.count == both.count == 6
+    assert a.sum == pytest.approx(both.sum)
+    for p in (10, 50, 99):
+        assert a.percentile(p) == pytest.approx(both.percentile(p))
+
+
+def test_histogram_merge_mismatched_edges_keeps_mass():
+    a = LatencyHistogram()
+    old = LatencyHistogram(edges=(1.0, 10.0, 100.0))
+    for v in (0.5, 5.0, 50.0, 5000.0):
+        old.observe(v)
+    a.merge(old)
+    assert a.count == 4
+    assert a.sum == pytest.approx(old.sum)
+
+
+def test_histogram_dict_round_trip():
+    h = LatencyHistogram()
+    for v in (0.2, 2.0, 20.0, 200.0):
+        h.observe(v)
+    back = LatencyHistogram.from_dict(json.loads(json.dumps(h.to_dict())))
+    assert back.counts == h.counts
+    assert back.count == h.count
+    assert back.edges == h.edges
+    assert back.percentile(50) == pytest.approx(h.percentile(50))
+
+
+# --------------------------------------------------------------------------- #
+# MetricsRegistry exposition
+# --------------------------------------------------------------------------- #
+
+# one exposition line: name{optional labels} value
+_EXPO_LINE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{le="[^"]+"\})? -?[0-9.e+-]+(inf)?$'
+)
+
+
+def test_registry_exposition_is_valid_prometheus_text():
+    reg = MetricsRegistry(prefix="test_")
+    reg.counter("requests_total", "requests").inc(3)
+    reg.gauge("queue_depth", "queued").set(7.5)
+    h = reg.histogram("latency_ms", "latency")
+    for v in (0.3, 3.0, 30.0):
+        h.observe(v)
+    text = reg.expose()
+    assert text.endswith("\n")
+    for line in text.strip().splitlines():
+        if line.startswith("# HELP") or line.startswith("# TYPE"):
+            continue
+        assert _EXPO_LINE.match(line), line
+    assert "test_requests_total 3" in text
+    assert "test_queue_depth 7.5" in text
+    assert "# TYPE test_latency_ms histogram" in text
+    assert 'test_latency_ms_bucket{le="+Inf"} 3' in text
+    assert "test_latency_ms_count 3" in text
+    # cumulative buckets are non-decreasing
+    cums = [
+        int(line.rsplit(" ", 1)[1])
+        for line in text.splitlines()
+        if line.startswith("test_latency_ms_bucket")
+    ]
+    assert cums == sorted(cums)
+
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = MetricsRegistry()
+    c = reg.counter("a_total")
+    assert reg.counter("a_total") is c
+    with pytest.raises(ValueError):
+        reg.gauge("a_total")
+    assert reg.names() == ["a_total"]
+
+
+def test_registry_sanitizes_names():
+    reg = MetricsRegistry()
+    c = reg.counter("weird-name.with spaces")
+    assert re.match(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$", c.name)
+
+
+# --------------------------------------------------------------------------- #
+# SlowQueryLog
+# --------------------------------------------------------------------------- #
+
+
+def test_slow_query_log_bounded_and_sorted():
+    log = SlowQueryLog(max_entries=8)
+    for i in range(20):
+        log.add({"trace_id": str(i), "latency_ms": float(i)})
+    assert len(log) == 8  # ring: only the most recent survive
+    worst = log.worst(3)
+    assert [w["latency_ms"] for w in worst] == [19.0, 18.0, 17.0]
+    assert log.worst(0) == []
+
+
+# --------------------------------------------------------------------------- #
+# /healthz readiness
+# --------------------------------------------------------------------------- #
+
+
+class _FakeService:
+    """shard_health-reporting stand-in (no sockets needed)."""
+
+    num_shards = 2
+    op_timeout = 5.0
+
+    def __init__(self, live):
+        self._live = live
+
+    def generation_vector(self):
+        return (0, 0)
+
+    def shard_health(self):
+        return [
+            {"shard": i, "transport": "fake", "replicas": 2,
+             "replicas_live": n}
+            for i, n in enumerate(self._live)
+        ]
+
+
+def test_healthz_503_when_a_shard_has_no_live_replica():
+    gw = Gateway(_FakeService([2, 0]))
+    status, obj = gw._healthz()
+    assert status == 503
+    assert obj["ok"] is False
+    assert obj["down_shards"] == [1]
+    status, obj = Gateway(_FakeService([1, 2]))._healthz()
+    assert status == 200 and obj["ok"] is True
+
+
+# --------------------------------------------------------------------------- #
+# Stats schema consistency + /metrics completeness (whole stack, thread)
+# --------------------------------------------------------------------------- #
+
+_LATENCY_FIELDS = {"queries", "queries_timed", "p50_ms", "p99_ms"}
+
+
+@pytest.fixture(scope="module")
+def traced_gateway(corpus):
+    svc = ClusterService.from_tree(corpus, 2, batch_window_ms=0.5)
+    with Gateway(svc, own_service=True).start() as gw:
+        for kws in ("vinyl", "vinyl reissue", "jazz"):
+            status, obj = _req(gw, "POST", "/query", {"keywords": kws})
+            assert status == 200, obj
+        yield gw
+
+
+def _layer_stats(layer, corpus, traced_gateway):
+    if layer == "service":
+        from repro.core import KeywordSearchEngine
+
+        eng = KeywordSearchEngine(corpus)
+        with QueryService(eng, batch_window_ms=0.5) as svc:
+            svc.map(["vinyl", "jazz"])
+            return svc.stats().to_dict()
+    if layer == "cluster":
+        return traced_gateway.service.stats().to_dict()
+    if layer == "gateway":
+        status, obj = _req(traced_gateway, "GET", "/stats")
+        assert status == 200
+        return obj["service"]
+    raise AssertionError(layer)
+
+
+@pytest.mark.parametrize("layer", ["service", "cluster", "gateway"])
+def test_stats_schema_latency_fields_everywhere(layer, corpus, traced_gateway):
+    d = _layer_stats(layer, corpus, traced_gateway)
+    missing = _LATENCY_FIELDS - set(d)
+    assert not missing, f"{layer} stats missing {sorted(missing)}"
+    assert 0.0 < d["p50_ms"] <= d["p99_ms"]
+    assert d["queries_timed"] >= 1
+    # plan counters roll up under the same names at every layer
+    assert "plan_hit_rate" in d
+
+
+def test_metrics_exposes_every_registered_metric(traced_gateway):
+    status, text = _req(traced_gateway, "GET", "/metrics")
+    assert status == 200
+    assert isinstance(text, str)  # text/plain exposition, not JSON
+    for name in traced_gateway.registry.names():
+        assert f"# TYPE {name} " in text, f"{name} not exposed"
+    # the request histogram observed the queries the fixture ran
+    m = re.search(r"^xks_gateway_request_latency_ms_count (\d+)$", text, re.M)
+    assert m and int(m.group(1)) >= 3
+    assert "xks_gateway_queries_total" in text
+    assert "xks_cluster_queries" in text  # service rollup mirrored
+
+
+def test_debug_slow_returns_span_trees(traced_gateway):
+    status, obj = _req(traced_gateway, "GET", "/debug/slow?n=2")
+    assert status == 200
+    assert obj["entries"] >= 3
+    assert 1 <= len(obj["slowest"]) <= 2
+    worst = obj["slowest"][0]
+    assert worst["trace_id"]
+    assert worst["latency_ms"] >= obj["slowest"][-1]["latency_ms"]
+    names = _flatten_names(worst["spans"])
+    assert "gateway.request" in names
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end traced span trees across processes
+# --------------------------------------------------------------------------- #
+
+
+def _flatten(tree):
+    out = []
+    stack = list(tree)
+    while stack:
+        node = stack.pop()
+        out.append(node)
+        stack.extend(node.get("children", ()))
+    return out
+
+
+def _flatten_names(tree):
+    return {s["name"] for s in _flatten(tree)}
+
+
+def _traced_query(gw, keywords, semantics="slca"):
+    """POST a traced query; return (response, slow-log entry for its trace)."""
+    tid = new_trace_id()
+    tp = make_traceparent(tid, new_span_id())
+    status, obj = _req(
+        gw, "POST", "/query",
+        {"keywords": keywords, "semantics": semantics},
+        headers={"traceparent": tp},
+    )
+    assert status == 200, obj
+    assert obj["trace_id"] == tid  # the incoming header's trace id sticks
+    entry = next(
+        e for e in gw.slow_log.worst(gw.slow_log.max_entries)
+        if e["trace_id"] == tid
+    )
+    return obj, entry
+
+
+def _assert_one_trace(entry):
+    spans = _flatten(entry["spans"])
+    assert {s["trace_id"] for s in spans} == {entry["trace_id"]}
+    for s in spans:
+        assert s["dur_ms"] is not None and s["dur_ms"] >= 0.0
+    return {s["name"] for s in spans}
+
+
+def test_traced_span_tree_over_process_replicas(corpus):
+    svc = ClusterService.from_tree(
+        corpus, 2, transport="process", replicas=2, batch_window_ms=0.5
+    )
+    with Gateway(svc, own_service=True).start() as gw:
+        obj, entry = _traced_query(gw, "vinyl reissue", semantics="elca")
+        names = _assert_one_trace(entry)
+        # the full path: gateway -> cache probe -> router fanout -> hedged
+        # replica attempt -> worker RPC (in the subprocess) -> service batch
+        # -> engine phases, all under ONE trace id across 3+ processes
+        assert {
+            "gateway.request", "gateway.cache", "router.submit",
+            "shard.gather", "replica.attempt", "worker.rpc",
+            "service.execute", "router.merge",
+        } <= names
+        assert any(n.startswith(("plan.", "kernel.")) for n in names)
+        # a cache hit is traced too, but stops at the cache span
+        obj2, entry2 = _traced_query(gw, "vinyl reissue", semantics="elca")
+        assert obj2["cached"] is True
+        hit_names = _assert_one_trace(entry2)
+        assert {"gateway.request", "gateway.cache"} <= hit_names
+        assert "router.submit" not in hit_names
+
+
+def test_traced_span_tree_over_remote(corpus):
+    svc = ClusterService.from_tree(
+        corpus, 2, transport="remote", batch_window_ms=0.5
+    )
+    with Gateway(svc, own_service=True).start() as gw:
+        _obj, entry = _traced_query(gw, "vinyl reissue")
+        names = _assert_one_trace(entry)
+        assert {
+            "gateway.request", "gateway.cache", "router.submit",
+            "shard.gather", "worker.rpc", "service.execute", "router.merge",
+        } <= names
+        assert any(n.startswith(("plan.", "kernel.")) for n in names)
