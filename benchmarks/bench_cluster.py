@@ -252,6 +252,15 @@ def run() -> None:
                     art, transport, "zipf", work, mono_zipf, timed,
                     rate_from="stats", **svc_kw,
                 )
+                if transport == "thread":
+                    # same Zipf traffic with every shard answering through
+                    # the fused single-launch pipeline — the serving-level
+                    # view of the fusion win (thread transport only: the
+                    # comparison is backend vs backend, not wire vs wire)
+                    _cluster_row(
+                        art, transport, "zipf_fused", work, mono_zipf, timed,
+                        rate_from="stats", backends="fused", **svc_kw,
+                    )
                 if transport != "thread" and SMOKE:
                     # spawning a second fleet for the no-coalescing row is
                     # the one cost smoke skips; the thread row reports it

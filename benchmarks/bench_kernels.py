@@ -1,0 +1,141 @@
+"""Beyond-paper: per-kernel microbenchmarks — each phase standalone vs fused.
+
+Times the three chained-pipeline Pallas kernels in isolation (membership
+compare, block-counting searchsorted, ELCA child mat-sum), then the two
+end-to-end routes over the same synthetic batch: the chained per-query
+pipeline (``run_query_pallas`` loop — one launch cascade per query) and the
+fused single-launch pipeline (``PlanCache.run(backend="fused")`` — one
+batched kernel walk for the whole window).  The standalone rows attribute
+where the chained path's time goes; the chained/fused pair is the
+fusion win itself at each bucket size.
+
+All kernels run in interpret mode on CPU (see README "Kernels"), so
+absolute times are not TPU times — the launch-count and bytes-moved
+structure is what transfers.
+
+CSV: ``variant,kernel,rows,m0,mo,us,qps`` (``us`` = mean wall-time of one
+full operation: one kernel call for phase rows, the whole ``rows``-query
+batch for chained/fused rows; ``qps`` = queries/s for the batch rows,
+calls/s for phase rows).
+"""
+import os
+import time
+
+import numpy as np
+
+from repro.core.idlist import IDList, make_pidpos
+from repro.core.plan_cache import PlanCache
+from repro.kernels import ops
+from repro.kernels.shapes import bucket
+
+from .common import REPEATS
+
+ROWS = 8
+K = 3
+
+
+def _time(fn, repeats: int = 0) -> float:
+    repeats = repeats or REPEATS
+    fn()  # warm: jit + kernel variant compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def _row(variant, kernel, rows, m0, mo, us, n_queries=1):
+    qps = n_queries / (us / 1e6) if us else 0.0
+    print(f"{variant},{kernel},{rows},{m0},{mo},{us:.1f},{qps:.0f}")
+
+
+# Synthetic valid corpora (mirrors the generators proven equivalent in
+# tests/test_fused.py): preorder trees, ancestor-closed posting lists.
+def _preorder_tree(rng, n):
+    raw_par = [-1] + [int(rng.integers(0, i)) for i in range(1, n)]
+    kids = [[] for _ in range(n)]
+    for i in range(1, n):
+        kids[raw_par[i]].append(i)
+    par = np.full(n, -1, np.int64)
+    stack, count = [(0, -1)], 0
+    while stack:
+        v, p = stack.pop()
+        nid, count = count, count + 1
+        par[nid] = p
+        for c in reversed(kids[v]):
+            stack.append((c, nid))
+    return par
+
+
+def _keyword_list(rng, n, par, n_direct):
+    direct = rng.choice(n, size=n_direct, replace=False)
+    nd: dict[int, int] = {}
+    for d in direct:
+        v = int(d)
+        while v >= 0:
+            nd[v] = nd.get(v, 0) + 1
+            v = int(par[v])
+    ids = np.array(sorted(nd), dtype=np.int32)
+    ndesc = np.array([nd[i] for i in sorted(nd)], dtype=np.int32)
+    return IDList(ids=ids, pidpos=make_pidpos(ids, par), ndesc=ndesc)
+
+
+def _batch(rng, n_nodes, rows, k):
+    items = []
+    for _ in range(rows):
+        par = _preorder_tree(rng, n_nodes)
+        items.append([
+            _keyword_list(rng, n_nodes, par, max(2, n_nodes // 3))
+            for _ in range(k)
+        ])
+    return items
+
+
+def _section(rng, n_nodes):
+    items = _batch(rng, n_nodes, ROWS, K)
+    m0 = bucket(max(len(it[0].ids) for it in items), minimum=16)
+    mo = bucket(max(len(l.ids) for it in items for l in it[1:]), minimum=16)
+
+    # --- standalone phases at this bucket size --- #
+    a = np.unique(rng.integers(0, 4 * mo, size=mo)).astype(np.int32)
+    q = np.sort(rng.choice(4 * mo, size=m0, replace=False)).astype(np.int32)
+    ca = np.sort(rng.choice(4 * m0, size=m0, replace=False)).astype(np.int32)
+    par_ids = rng.choice(ca, size=m0).astype(np.int32)
+    nd = rng.integers(1, 50, size=(K, m0)).astype(np.int32)
+    us = _time(lambda: ops.intersect_membership(a, q))
+    _row(f"kern.membership.{m0}x{mo}", "membership", 1, m0, mo, us)
+    us = _time(lambda: ops.searchsorted_positions(a, q))
+    _row(f"kern.searchsorted.{m0}x{mo}", "searchsorted", 1, m0, mo, us)
+    us = _time(lambda: ops.elca_child_sums(ca, par_ids, nd))
+    _row(f"kern.elca_segsum.{m0}", "elca_segsum", 1, m0, mo, us)
+
+    # --- end-to-end: chained per-query cascade vs one fused launch --- #
+    cache = PlanCache(backend="fused")
+    keys = list(range(len(items)))
+
+    def run_chained():
+        return [ops.run_query_pallas(it, "elca") for it in items]
+
+    def run_fused():
+        return cache.run(items, keys, semantics="elca", backend="fused")
+
+    # cross-check before timing: same batch, same answers
+    for a_res, b_res in zip(run_chained(), run_fused().values()):
+        np.testing.assert_array_equal(a_res, b_res)
+
+    us = _time(run_chained, repeats=1)  # slow side: one timed pass
+    _row(f"kern.chained.{ROWS}x{m0}", "chained", ROWS, m0, mo, us, ROWS)
+    us = _time(run_fused)
+    _row(f"kern.fused.{ROWS}x{m0}", "fused", ROWS, m0, mo, us, ROWS)
+    return {"m0": m0, "mo": mo}
+
+
+def run() -> dict:
+    smoke = os.environ.get("BENCH_SERVICE_SMOKE") == "1"
+    sizes = [200] if smoke else [200, 800, 3000]
+    rng = np.random.default_rng(11)
+    print("variant,kernel,rows,m0,mo,us,qps")
+    return {n: _section(rng, n) for n in sizes}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,6 +1,6 @@
 """Diff two ``run.py --json`` reports and fail CI on perf regressions.
 
-Two checks, both against the cluster section's CSV records:
+Checks are selected with ``--checks`` (default ``steady,tracing``):
 
   * **steady-state regression** — the steady serving row (default: the
     ``cluster<N>_zipf`` row on the ``thread`` transport) must not lose
@@ -14,12 +14,22 @@ Two checks, both against the cluster section's CSV records:
     95%).  This is the gate that keeps per-query tracing effectively
     free: if span bookkeeping leaks cost into the hot path, this trips
     before a human notices.
+  * **fused pipeline** (``--checks fused``) — the fused single-launch
+    search must keep beating the chained per-query Pallas path.  Within
+    the *current* report, the ``vec.zipf_batch.fused`` row's speedup
+    column (chained-time / fused-time, machine-independent) must stay at
+    least ``--fused-floor`` (default 1.0 — fusion that stops winning is a
+    regression by definition).  Against the snapshot, the fused batch row
+    and every ``kern.fused.*`` microbench row present in both reports
+    must hold their qps within ``--threshold``.
 
-Exit status 0 = both checks pass, 1 = any check fails or a required row
-is missing.  Usage::
+Exit status 0 = all selected checks pass, 1 = any check fails or a
+required row is missing.  Usage::
 
     python -m benchmarks.run --smoke --section cluster --json current.json
     python -m benchmarks.compare current.json \
+        --snapshot benchmarks/snapshots/BENCH_*.json
+    python -m benchmarks.compare current.json --checks fused \
         --snapshot benchmarks/snapshots/BENCH_*.json
 """
 from __future__ import annotations
@@ -80,55 +90,101 @@ def main(argv=None) -> int:
         "--overhead-threshold", type=float, default=0.05,
         help="max allowed fractional qps cost of tracing (trace_on vs off)",
     )
+    ap.add_argument(
+        "--checks", default="steady,tracing",
+        help="comma list of checks to run: steady, tracing, fused",
+    )
+    ap.add_argument(
+        "--fused-floor", type=float, default=1.0,
+        help="min chained/fused speedup the fused batch row must keep",
+    )
     args = ap.parse_args(argv)
     transport = args.transport or None
+    checks = {c.strip() for c in args.checks.split(",") if c.strip()}
+    unknown = checks - {"steady", "tracing", "fused"}
+    if unknown:
+        ap.error(f"unknown checks: {sorted(unknown)}")
 
     current = _load(args.current)
     snapshot = _load(args.snapshot)
     failed = False
 
-    # ------- steady-state qps vs the committed snapshot ------- #
-    cur = find_row(current, args.row, transport)
-    base = find_row(snapshot, args.row, transport)
-    if cur is None or base is None:
-        missing = "current" if cur is None else "snapshot"
-        print(f"FAIL: steady row {args.row!r} ({transport or 'any'} "
-              f"transport) missing from {missing} report")
-        failed = True
-    else:
+    def qps_vs_snapshot(label: str, pattern: str, tport: str | None) -> bool:
+        """Shared floor check: current row's qps vs the snapshot's."""
+        cur = find_row(current, pattern, tport)
+        base = find_row(snapshot, pattern, tport)
+        if cur is None or base is None:
+            missing = "current" if cur is None else "snapshot"
+            print(f"FAIL: {label} row {pattern!r} ({tport or 'any'} "
+                  f"transport) missing from {missing} report")
+            return True
         cq, bq = _qps(cur), _qps(base)
         floor = bq * (1.0 - args.threshold)
         verdict = "ok" if cq >= floor else "FAIL"
         print(
-            f"{verdict}: steady {cur['variant']}/{cur.get('transport', '?')} "
+            f"{verdict}: {label} {cur['variant']} "
             f"qps {cq:.0f} vs snapshot {bq:.0f} "
             f"(floor {floor:.0f}, threshold -{args.threshold:.0%})"
         )
-        failed |= cq < floor
+        return cq < floor
+
+    # ------- steady-state qps vs the committed snapshot ------- #
+    if "steady" in checks:
+        failed |= qps_vs_snapshot("steady", args.row, transport)
 
     # ------- tracing overhead within the current report ------- #
-    off = find_row(current, "trace_off", transport)
-    on = find_row(current, "trace_on", transport)
-    if off is None or on is None:
-        print("FAIL: trace_off/trace_on rows missing from current report")
-        failed = True
-    else:
-        # the trace_on row's speedup column carries the exact median
-        # per-pair ratio; the qps columns are integer-rounded and lose
-        # ~0.3% near the threshold, so fall back to them only if a
-        # foreign report omits the column
-        try:
-            ratio = float(on["speedup_vs_mono"])
-        except (KeyError, TypeError, ValueError):
-            ratio = _qps(on) / max(_qps(off), 1e-9)
-        floor = 1.0 - args.overhead_threshold
-        verdict = "ok" if ratio >= floor else "FAIL"
-        print(
-            f"{verdict}: tracing overhead qps(on)/qps(off) = "
-            f"{_qps(on):.0f}/{_qps(off):.0f} = {ratio:.3f} "
-            f"(floor {floor:.3f})"
+    if "tracing" in checks:
+        off = find_row(current, "trace_off", transport)
+        on = find_row(current, "trace_on", transport)
+        if off is None or on is None:
+            print("FAIL: trace_off/trace_on rows missing from current report")
+            failed = True
+        else:
+            # the trace_on row's speedup column carries the exact median
+            # per-pair ratio; the qps columns are integer-rounded and lose
+            # ~0.3% near the threshold, so fall back to them only if a
+            # foreign report omits the column
+            try:
+                ratio = float(on["speedup_vs_mono"])
+            except (KeyError, TypeError, ValueError):
+                ratio = _qps(on) / max(_qps(off), 1e-9)
+            floor = 1.0 - args.overhead_threshold
+            verdict = "ok" if ratio >= floor else "FAIL"
+            print(
+                f"{verdict}: tracing overhead qps(on)/qps(off) = "
+                f"{_qps(on):.0f}/{_qps(off):.0f} = {ratio:.3f} "
+                f"(floor {floor:.3f})"
+            )
+            failed |= ratio < floor
+
+    # ------- fused pipeline must keep beating the chained path ------- #
+    if "fused" in checks:
+        batch = find_row(current, r"vec\.zipf_batch\.fused", None)
+        if batch is None:
+            print("FAIL: vec.zipf_batch.fused row missing from current report")
+            failed = True
+        else:
+            try:
+                ratio = float(batch["speedup"])
+            except (KeyError, TypeError, ValueError):
+                ratio = 0.0
+            verdict = "ok" if ratio >= args.fused_floor else "FAIL"
+            print(
+                f"{verdict}: fused batch speedup vs chained pallas = "
+                f"{ratio:.2f} (floor {args.fused_floor:.2f})"
+            )
+            failed |= ratio < args.fused_floor
+        failed |= qps_vs_snapshot("fused batch", r"vec\.zipf_batch\.fused", None)
+        # every fused microbench shape present in both reports holds its qps
+        rx = re.compile(r"kern\.fused\..*")
+        shapes = sorted(
+            {r["variant"] for r in _records(snapshot)
+             if rx.fullmatch(r.get("variant", ""))}
         )
-        failed |= ratio < floor
+        if not shapes:
+            print("note: snapshot has no kern.fused.* rows; skipping")
+        for variant in shapes:
+            failed |= qps_vs_snapshot("fused kernel", re.escape(variant), None)
 
     return 1 if failed else 0
 

@@ -91,6 +91,7 @@ def main(argv=None) -> int:
         bench_cluster,
         bench_db_size,
         bench_index_size,
+        bench_kernels,
         bench_prefix_dag,
         bench_query_length,
         bench_search_hillclimb,
@@ -107,6 +108,7 @@ def main(argv=None) -> int:
         ("fig 11 / experiment IV (algorithms)", bench_algorithms),
         ("§IV-F (index size)", bench_index_size),
         ("beyond-paper: vectorized backends", bench_vectorized),
+        ("beyond-paper: per-kernel microbench", bench_kernels),
         ("beyond-paper: search perf hillclimb", bench_search_hillclimb),
         ("beyond-paper: prefix-DAG serving dedup", bench_prefix_dag),
         ("beyond-paper: query service throughput", bench_service),

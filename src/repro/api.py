@@ -33,8 +33,10 @@ import numpy as np
 
 SEMANTICS = ("slca", "elca")
 INDEXES = ("tree", "dag")
-# user-facing backend names; services map "jax" -> the xla drain internally
-BACKENDS = ("scalar", "jax", "xla", "pallas")
+# user-facing backend names; services map "jax" -> the xla drain internally.
+# "fused" is the single-launch Pallas pipeline (membership + intersect + ELCA
+# in one kernel); "pallas" is the chained per-phase kernel path.
+BACKENDS = ("scalar", "jax", "xla", "pallas", "fused")
 
 
 def validate_semantics(semantics: str) -> str:

@@ -5,7 +5,8 @@
 
 ``index``    "tree" (Zhou et al. baseline) or "dag" (the paper's IDCluster)
 ``backend``  "scalar" (paper-faithful host algorithms), "jax" (vectorized),
-             or "pallas" (vectorized with the Pallas intersection kernel)
+             "pallas" (vectorized with the chained Pallas kernels), or
+             "fused" (one batched Pallas launch from membership to ELCA)
 ``algorithm`` scalar backend only: fwd/bwd × slca/elca variant selection.
 
 An engine owns one :class:`~repro.core.plan_cache.PlanCache`: every
@@ -269,6 +270,12 @@ class KeywordSearchEngine:
                 return kernel_ops.run_query_pallas(
                     self.base.idlists(kws), semantics=semantics
                 )
+            if backend == "fused":
+                from repro.kernels import fused_search  # lazy: avoid cycle
+
+                return fused_search.run_query_fused(
+                    self.base.idlists(kws), semantics=semantics
+                )
             return search_vec.run_query(
                 self.base.idlists(kws), semantics=semantics, backend="xla"
             )
@@ -286,7 +293,7 @@ class KeywordSearchEngine:
                 self.cluster,
                 kws,
                 semantics=semantics,
-                backend="pallas" if backend == "pallas" else "xla",
+                backend=backend if backend in ("pallas", "fused") else "xla",
                 stats=self.last_stats.data,
                 plan=self.plan_cache,
                 phases=phases,

@@ -23,7 +23,6 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
-import jax.numpy as jnp
 import numpy as np
 
 from .idlist import IDList
@@ -54,6 +53,7 @@ class PlanCache:
         self.hits = 0  # launches whose shape signature was seen before
         self.misses = 0  # launches that compiled a new executable
         self.rows_padded = 0  # wasted rows across all launches (R padding)
+        self.fused_fallbacks = 0  # fused launches demoted to chained (shape cap)
         self._seen: set[tuple] = set()
 
     # ------------------------------------------------------------------ #
@@ -73,6 +73,7 @@ class PlanCache:
             "plans": self.plans,
             "plan_hit_rate": round(self.hit_rate(), 4),
             "rows_padded": self.rows_padded,
+            "fused_fallbacks": self.fused_fallbacks,
         }
 
     def reset_counters(self) -> None:
@@ -134,14 +135,16 @@ class PlanCache:
                 oids[r, j, : len(l)] = l.ids
                 ond[r, j, : len(l)] = l.ndesc
                 on[r, j] = len(l)
+        # numpy on purpose: jit device_puts these on call, while the fused
+        # backend's host window bookkeeping reads them without a device trip
         batch = dict(
-            ids0=jnp.asarray(ids0),
-            pid0=jnp.asarray(pid0),
-            ndesc0=jnp.asarray(nd0),
-            other_ids=jnp.asarray(oids),
-            other_ndesc=jnp.asarray(ond),
-            n0=jnp.asarray(n0),
-            other_n=jnp.asarray(on),
+            ids0=ids0,
+            pid0=pid0,
+            ndesc0=nd0,
+            other_ids=oids,
+            other_ndesc=ond,
+            n0=n0,
+            other_n=on,
         )
         return batch, keys, PlanKey(rows, k, m0, mo, semantics, backend)
 
@@ -191,18 +194,68 @@ class PlanCache:
                 },
             })
             w1 = time.time() * 1e3
-        ids, mask = ca_search_batch(**batch, semantics=semantics, backend=backend)
+        if backend == "fused":
+            # lazy: fused_search pulls in pallas; PlanCache stays importable
+            # without it (scalar-only deployments)
+            from repro.kernels.fused_search import (
+                MAX_FUSED_M0,
+                fused_search_batch,
+            )
+
+            if sig.m0 > MAX_FUSED_M0:
+                # giant shortest list: the fused variant would blow VMEM —
+                # demote this launch to the chained batch path
+                self.fused_fallbacks += 1
+                ids, mask = ca_search_batch(
+                    **batch, semantics=semantics, backend="xla"
+                )
+                kstats = {"fallback": True}
+            else:
+                kstats = {}
+                ids, mask = fused_search_batch(
+                    **batch, semantics=semantics, stats=kstats
+                )
+        else:
+            ids, mask = ca_search_batch(
+                **batch, semantics=semantics, backend=backend
+            )
+            kstats = None
         ids = np.asarray(ids)
         mask = np.asarray(mask)
         if phases is not None:
-            phases.append({
-                "name": "kernel.ca_search",
-                "t0_ms": w1, "dur_ms": (time.perf_counter() - p1) * 1e3,
-                "attrs": {
+            if kstats is not None and not kstats.get("fallback"):
+                # the whole pipeline is one launch: a single span, with the
+                # per-phase cost split carried as roofline byte counters
+                # instead of child timings
+                attrs = {
                     "backend": backend, "semantics": semantics,
                     "rows": sig.rows,
-                },
-            })
+                }
+                attrs.update(kstats)
+                try:
+                    from repro.roofline.analysis import search_pipeline_bytes
+
+                    attrs.update(search_pipeline_bytes(
+                        rows=sig.rows, k=sig.k, m0=sig.m0, mo=sig.mo,
+                        window=kstats.get("window", 1),
+                        bo=kstats.get("bo", 512),
+                    ).attrs())
+                except Exception:  # roofline is advisory, never hot-path fatal
+                    pass
+                phases.append({
+                    "name": "kernel.fused_round",
+                    "t0_ms": w1, "dur_ms": (time.perf_counter() - p1) * 1e3,
+                    "attrs": attrs,
+                })
+            else:
+                phases.append({
+                    "name": "kernel.ca_search",
+                    "t0_ms": w1, "dur_ms": (time.perf_counter() - p1) * 1e3,
+                    "attrs": {
+                        "backend": backend, "semantics": semantics,
+                        "rows": sig.rows,
+                    },
+                })
         for r, key in enumerate(kept):
             out[key] = ids[r][mask[r]].astype(np.int64)
         return out

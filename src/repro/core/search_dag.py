@@ -120,10 +120,12 @@ def dag_search_vec_multi(
     across *calls*, not just rounds.  Memoisation is per query (different
     keyword sets ⇒ different RC results).
 
-    ``backend`` picks the membership kernel *inside* the shared jitted batch
-    search ("xla", or "pallas" once :mod:`repro.kernels.ops` has registered
-    it); either way every launch flows through the PlanCache, whose plan keys
-    carry the backend name.
+    ``backend`` picks the device path *inside* the shared batch search:
+    "xla" (or "pallas" once :mod:`repro.kernels.ops` has registered its
+    membership kernel) runs the jitted ``ca_search_batch``; "fused" hands
+    the whole packed batch to the single-launch Pallas pipeline
+    (:mod:`repro.kernels.fused_search`).  Either way every launch flows
+    through the PlanCache, whose plan keys carry the backend name.
     """
     plan = _plan_or_default(plan)
     launches0 = plan.launches

@@ -25,9 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .idlist import IDList
+from repro.kernels.shapes import INT_PAD, bucket  # noqa: F401  (re-exported)
 
-INT_PAD = np.int32(np.iinfo(np.int32).max)
+from .idlist import IDList
 
 # membership backend registry: name -> fn(sorted_arr, valid_len, queries)
 #   -> (found_mask [m0] bool, positions [m0] int32)
@@ -138,14 +138,6 @@ def ca_search_batch(
 # --------------------------------------------------------------------------- #
 # Host-side padding / bucketing helpers
 # --------------------------------------------------------------------------- #
-
-
-def bucket(n: int, minimum: int = 16) -> int:
-    """Next power-of-two bucket >= n (bounds the number of jit cache entries)."""
-    b = minimum
-    while b < n:
-        b <<= 1
-    return b
 
 
 def pad_list(lst: IDList, m: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

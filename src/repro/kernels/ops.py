@@ -5,10 +5,15 @@ many blocks of the larger list a query block may span).  It is data-dependent,
 so these wrappers are host-driven: numpy computes block starts and the
 bucketed window, then dispatches one of a handful of compiled kernel variants.
 On a real TPU the bookkeeping is a few hundred bytes per call; the heavy
-compare runs in the kernel.  interpret=True executes the same kernel body on
-CPU (how this container validates them).
+compare runs in the kernel.  Interpret mode executes the same kernel bodies
+on CPU (how this container validates them); it defaults ON and is controlled
+by the ``XKS_PALLAS_INTERPRET`` env var ("0"/"false"/"no"/"off" compile for
+the attached accelerator instead) — every wrapper also takes an explicit
+``interpret=`` keyword override.
 """
 from __future__ import annotations
+
+import os
 
 import jax.numpy as jnp
 import numpy as np
@@ -19,31 +24,25 @@ from repro.core.search_vec import register_membership_backend
 from .elca_segsum import elca_segsum_pallas_call
 from .intersect import membership_pallas_call
 from .searchsorted import searchsorted_pallas_call
-
-INT_PAD = np.int32(2**31 - 1)
-
-# interpret-mode flag: True on CPU (this container); a TPU deployment flips it
-INTERPRET = True
+from .shapes import INT_PAD, bucket_pow2, pad_to
 
 
-def _pad_to(arr: np.ndarray, mult: int, fill) -> np.ndarray:
-    n = arr.shape[-1]
-    m = ((n + mult - 1) // mult) * mult
-    m = max(m, mult)
-    if arr.ndim == 1:
-        out = np.full((m,), fill, dtype=np.int32)
-        out[:n] = arr
-    else:
-        out = np.full((arr.shape[0], m), fill, dtype=np.int32)
-        out[:, :n] = arr
-    return out
+def _env_interpret(default: bool = True) -> bool:
+    raw = os.environ.get("XKS_PALLAS_INTERPRET")
+    if raw is None:
+        return default
+    return raw.strip().lower() not in ("0", "false", "no", "off")
 
 
-def _bucket_pow2(n: int, lo: int = 1) -> int:
-    b = lo
-    while b < n:
-        b <<= 1
-    return b
+# interpret-mode flag: read once at import from XKS_PALLAS_INTERPRET (default
+# True — this container has no TPU).  A TPU deployment exports
+# XKS_PALLAS_INTERPRET=0 instead of editing source.
+INTERPRET = _env_interpret()
+
+# canonical homes moved to kernels/shapes.py; kept under the old private
+# names because tests and downstream code import them from here
+_pad_to = pad_to
+_bucket_pow2 = bucket_pow2
 
 
 def intersect_membership(

@@ -19,8 +19,9 @@ only touched from the drain thread, so no engine-level locking is needed.
 
 ``backend`` picks how a window is drained: "jax" (default) and "pallas" run
 the batched vectorized DAG search through the engine's PlanCache (the pallas
-variant swaps the membership kernel inside the same jitted body), "scalar"
-runs the paper-faithful host algorithms query-by-query.  One service per
+variant swaps the membership kernel inside the same jitted body), "fused"
+sends each drained window through the single-launch Pallas pipeline,
+"scalar" runs the paper-faithful host algorithms query-by-query.  One service per
 shard with per-shard backends is exactly the multi-backend drain the cluster
 router (:mod:`repro.cluster`) builds on.
 
@@ -47,9 +48,14 @@ from repro.obs import TRACER, emit_phases
 # drain backends: how one admission window reaches the index.  "jax" and
 # "pallas" both run the batched vectorized search through the engine's
 # PlanCache (the backend name is part of each plan key; "pallas" swaps the
-# membership kernel inside the same jitted body), "scalar" runs the
+# membership kernel inside the same jitted body), "fused" hands each packed
+# window to the single-launch Pallas pipeline (one kernel from membership to
+# ELCA — the whole drained batch goes down intact), "scalar" runs the
 # paper-faithful host algorithms per query (no batching, no device).
-_BACKENDS = {"scalar": None, "jax": "xla", "xla": "xla", "pallas": "pallas"}
+_BACKENDS = {
+    "scalar": None, "jax": "xla", "xla": "xla", "pallas": "pallas",
+    "fused": "fused",
+}
 
 
 @dataclass
@@ -78,9 +84,10 @@ class QueryService:
             raise ValueError(
                 f"backend must be one of {sorted(_BACKENDS)}, got {backend!r}"
             )
-        if backend == "pallas":
+        if backend in ("pallas", "fused"):
             # importing the kernel package registers the "pallas" membership
-            # backend with search_vec; without it the first drain would fail
+            # backend with search_vec (and is where "fused" reads its
+            # interpret default); without it the first drain would fail
             from repro.kernels import ops as _kernel_ops  # noqa: F401
         self.engine = engine
         self.backend = backend

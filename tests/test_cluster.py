@@ -126,14 +126,14 @@ def test_partition_covers_every_node(corpus):
 
 
 @pytest.mark.parametrize("transport", ["thread", "process", "remote"])
-@pytest.mark.parametrize("backend", ["scalar", "jax", "pallas"])
+@pytest.mark.parametrize("backend", ["scalar", "jax", "pallas", "fused"])
 @pytest.mark.parametrize("num_shards", [1, 2, 4])
 def test_cluster_matches_monolith(corpus, expected, num_shards, backend,
                                   transport):
     """The acceptance matrix: shard counts x backends x semantics x transport.
 
     The jax drain covers the full query set; the scalar and (interpret-mode)
-    pallas drains cover a representative subset to bound suite runtime.  The
+    pallas/fused drains cover a representative subset to bound suite runtime.  The
     process transport runs the same full query set through per-shard
     subprocesses over a published artifact; the remote transport runs it
     through standalone shard servers on localhost sockets — results must be
@@ -141,7 +141,8 @@ def test_cluster_matches_monolith(corpus, expected, num_shards, backend,
     if transport in ("process", "remote") and backend != "jax":
         pytest.skip(
             f"{transport}-transport equivalence runs on the default jax "
-            "drain; the scalar/pallas drains are covered by the thread rows"
+            "drain; the scalar/pallas/fused drains are covered by the "
+            "thread rows"
         )
     queries = ALL_QUERIES if backend == "jax" else ALL_QUERIES[:4] + ALL_QUERIES[9:]
     idx = [ALL_QUERIES.index(q) for q in queries]
@@ -163,11 +164,15 @@ def test_cluster_matches_monolith(corpus, expected, num_shards, backend,
                 )
 
 
-def test_cluster_mixed_backends_match(corpus, expected):
-    """Heterogeneous drains in one cluster: scalar + pallas workers."""
+@pytest.mark.parametrize("backends", [
+    ["scalar", "pallas"],
+    ["fused", "jax"],
+])
+def test_cluster_mixed_backends_match(corpus, expected, backends):
+    """Heterogeneous drains in one cluster (scalar+pallas, fused+jax)."""
     queries = ALL_QUERIES[:6]
     with ClusterService.from_tree(
-        corpus, 2, backends=["scalar", "pallas"], batch_window_ms=1.0
+        corpus, 2, backends=backends, batch_window_ms=1.0
     ) as svc:
         for sem in ("slca", "elca"):
             got = svc.map(queries, semantics=sem)

@@ -140,7 +140,7 @@ def test_plan_counters_in_summary(engine):
     assert s["plan_hits"] + s["plan_misses"] == s["plan_launches_total"]
 
 
-@pytest.mark.parametrize("backend", ["scalar", "pallas"])
+@pytest.mark.parametrize("backend", ["scalar", "pallas", "fused"])
 def test_service_backends_match_scalar(engine, backend):
     queries = QS[:4]
     with QueryService(engine, backend=backend, batch_window_ms=1.0) as svc:

@@ -1,0 +1,129 @@
+"""kernels/shapes.py — the one home of padding / bucketing policy.
+
+These helpers used to exist as private copies in ops.py and search_vec.py;
+the edge cases here (overshoot, clamping, empty inputs, 2-D rows) are the
+ones whose behavior could silently drift between the copies.
+"""
+import numpy as np
+import pytest
+
+from repro.kernels import shapes
+from repro.kernels.shapes import INT_PAD, bucket, bucket_pow2, pad_to
+
+
+# --------------------------------------------------------------------------- #
+# bucket_pow2 / bucket
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("n,want", [
+    (0, 1), (1, 1), (2, 2), (3, 4), (4, 4), (5, 8),
+    (511, 512), (512, 512), (513, 1024), (1 << 20, 1 << 20),
+])
+def test_bucket_pow2_basic(n, want):
+    assert bucket_pow2(n) == want
+
+
+@pytest.mark.parametrize("n,lo,want", [
+    (0, 16, 16),    # empty input still gets one block
+    (-3, 4, 4),     # negative clamps to the floor, never loops forever
+    (1, 16, 16),
+    (16, 16, 16),
+    (17, 16, 32),
+    (1000, 16, 1024),
+    (5, 8, 8),
+])
+def test_bucket_pow2_floor(n, lo, want):
+    assert bucket_pow2(n, lo=lo) == want
+
+
+@pytest.mark.parametrize("lo", [0, -1, 3, 6, 12, 100])
+def test_bucket_pow2_rejects_non_pow2_floor(lo):
+    with pytest.raises(ValueError, match="power of two"):
+        bucket_pow2(5, lo=lo)
+
+
+def test_bucket_matches_plan_cache_policy():
+    # PlanCache's historical behavior: floor 16, power-of-two growth
+    assert bucket(0) == 16
+    assert bucket(16) == 16
+    assert bucket(17) == 32
+    assert bucket(100) == 128
+    assert bucket(3, minimum=1) == 4
+
+
+def test_bucket_monotone():
+    # monotonicity bounds the number of distinct compiled variants
+    prev = 0
+    for n in range(0, 300):
+        b = bucket_pow2(n)
+        assert b >= n and b >= prev
+        prev = b
+
+
+def test_bucket_never_overshoots_twice():
+    # the bucket is the *smallest* power-of-two >= n: b/2 < n for n > 1
+    for n in range(2, 5000, 7):
+        b = bucket_pow2(n)
+        assert b // 2 < n <= b
+
+
+# --------------------------------------------------------------------------- #
+# pad_to
+# --------------------------------------------------------------------------- #
+
+
+def test_pad_to_1d_exact_multiple_is_fresh_copy():
+    a = np.arange(8, dtype=np.int32)
+    out = pad_to(a, 4, INT_PAD)
+    assert out.shape == (8,)
+    np.testing.assert_array_equal(out, a)
+    out[0] = -99  # callers mutate pads freely — must never alias the input
+    assert a[0] == 0
+
+
+def test_pad_to_1d_overshoot():
+    a = np.arange(5, dtype=np.int32)
+    out = pad_to(a, 4, INT_PAD)
+    assert out.shape == (8,)
+    np.testing.assert_array_equal(out[:5], a)
+    assert np.all(out[5:] == INT_PAD)
+
+
+def test_pad_to_empty_gets_one_block():
+    out = pad_to(np.zeros(0, np.int32), 16, 0)
+    assert out.shape == (16,)
+    assert np.all(out == 0)
+
+
+def test_pad_to_2d_rows_share_fill():
+    a = np.arange(6, dtype=np.int32).reshape(2, 3)
+    out = pad_to(a, 4, -1)
+    assert out.shape == (2, 4)
+    np.testing.assert_array_equal(out[:, :3], a)
+    assert np.all(out[:, 3:] == -1)
+
+
+def test_pad_to_casts_to_int32():
+    out = pad_to(np.arange(3, dtype=np.int64), 4, 0)
+    assert out.dtype == np.int32
+
+
+# --------------------------------------------------------------------------- #
+# the old private names still resolve to the shared implementations
+# --------------------------------------------------------------------------- #
+
+
+def test_ops_aliases_point_here():
+    from repro.kernels import ops
+
+    assert ops._pad_to is shapes.pad_to
+    assert ops._bucket_pow2 is shapes.bucket_pow2
+    assert int(ops.INT_PAD) == int(INT_PAD) == 2**31 - 1
+
+
+def test_search_vec_reexports():
+    from repro.core import search_vec
+
+    assert search_vec.bucket is shapes.bucket
+    assert int(search_vec.INT_PAD) == int(INT_PAD)
