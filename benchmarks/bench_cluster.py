@@ -61,7 +61,13 @@ from repro.cluster import ClusterService, Overloaded, build_cluster
 from repro.cluster.workers.server import launch_cluster_servers
 from repro.core import KeywordSearchEngine
 from repro.data import QUERIES, generate_discogs_tree
-from repro.obs import TRACER, make_traceparent, new_span_id, new_trace_id
+from repro.obs import (
+    TRACER,
+    heat as heat_mod,
+    make_traceparent,
+    new_span_id,
+    new_trace_id,
+)
 from repro.serve import QueryService
 
 N = int(os.environ.get("BENCH_CLUSTER_RELEASES", "0")) or max(N_RELEASES, 1440)
@@ -359,6 +365,50 @@ def run() -> None:
             )
             print(
                 f"trace_on,thread,{off * ratio:.0f},{s['p50_ms']},"
+                f"{s['p99_ms']},0.00,{ratio:.3f},0"
+            )
+
+        # heat-tracking overhead: the always-on HeatSketch record() in the
+        # worker drain loop, off vs on, same interleaved-pair protocol as
+        # the tracing rows (adjacent drives share drift; the median
+        # per-pair ratio drops stall-poisoned pairs).  compare.py
+        # --checks heat gates the heat_on ratio >= 0.95.
+        with ClusterService.from_dir(
+            art, batch_window_ms=2.0, max_queue_per_shard=4096
+        ) as svc:
+            prev = -1
+            for _ in range(6 if SMOKE else 10):  # warm the plan-shape set
+                _drive(svc, unique)
+                misses = svc.stats().summary().get("plan_misses", -2)
+                if misses == prev:
+                    break
+                prev = misses
+
+            def _multi_heat(passes: int = 3) -> float:
+                t0 = time.perf_counter()
+                for _ in range(passes):
+                    _drive(svc, unique)
+                return passes * len(unique) / (time.perf_counter() - t0)
+
+            pairs = []
+            try:
+                for _ in range(7):
+                    heat_mod.set_enabled(False)
+                    o = _multi_heat()
+                    heat_mod.set_enabled(True)
+                    h = _multi_heat()
+                    pairs.append((o, h))
+            finally:
+                heat_mod.set_enabled(True)  # heat stays on outside the A/B
+            ratio = sorted(h / o for o, h in pairs)[len(pairs) // 2]
+            off = sorted(o for o, _ in pairs)[len(pairs) // 2]
+            s = svc.stats().summary()
+            print(
+                f"heat_off,thread,{off:.0f},{s['p50_ms']},{s['p99_ms']},"
+                "0.00,1.000,0"
+            )
+            print(
+                f"heat_on,thread,{off * ratio:.0f},{s['p50_ms']},"
                 f"{s['p99_ms']},0.00,{ratio:.3f},0"
             )
 

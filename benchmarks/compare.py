@@ -14,6 +14,12 @@ Checks are selected with ``--checks`` (default ``steady,tracing``):
     95%).  This is the gate that keeps per-query tracing effectively
     free: if span bookkeeping leaks cost into the hot path, this trips
     before a human notices.
+  * **heat overhead** (``--checks heat``) — within the *current* report,
+    the ``heat_on`` row's overhead ratio (median per-pair
+    qps(heat on)/qps(heat off), carried in its ``speedup_vs_mono``
+    column) must stay at least ``1 - --overhead-threshold``.  This is
+    what licenses the workload HeatSketch to be always-on in the worker
+    drain loop.
   * **fused pipeline** (``--checks fused``) — the fused single-launch
     search must keep beating the chained per-query Pallas path.  Within
     the *current* report, the ``vec.zipf_batch.fused`` row's speedup
@@ -92,7 +98,7 @@ def main(argv=None) -> int:
     )
     ap.add_argument(
         "--checks", default="steady,tracing",
-        help="comma list of checks to run: steady, tracing, fused",
+        help="comma list of checks to run: steady, tracing, heat, fused",
     )
     ap.add_argument(
         "--fused-floor", type=float, default=1.0,
@@ -101,7 +107,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     transport = args.transport or None
     checks = {c.strip() for c in args.checks.split(",") if c.strip()}
-    unknown = checks - {"steady", "tracing", "fused"}
+    unknown = checks - {"steady", "tracing", "heat", "fused"}
     if unknown:
         ap.error(f"unknown checks: {sorted(unknown)}")
 
@@ -152,6 +158,27 @@ def main(argv=None) -> int:
             verdict = "ok" if ratio >= floor else "FAIL"
             print(
                 f"{verdict}: tracing overhead qps(on)/qps(off) = "
+                f"{_qps(on):.0f}/{_qps(off):.0f} = {ratio:.3f} "
+                f"(floor {floor:.3f})"
+            )
+            failed |= ratio < floor
+
+    # ------- heat-tracking overhead within the current report ------- #
+    if "heat" in checks:
+        off = find_row(current, "heat_off", transport)
+        on = find_row(current, "heat_on", transport)
+        if off is None or on is None:
+            print("FAIL: heat_off/heat_on rows missing from current report")
+            failed = True
+        else:
+            try:
+                ratio = float(on["speedup_vs_mono"])
+            except (KeyError, TypeError, ValueError):
+                ratio = _qps(on) / max(_qps(off), 1e-9)
+            floor = 1.0 - args.overhead_threshold
+            verdict = "ok" if ratio >= floor else "FAIL"
+            print(
+                f"{verdict}: heat overhead qps(on)/qps(off) = "
                 f"{_qps(on):.0f}/{_qps(off):.0f} = {ratio:.3f} "
                 f"(floor {floor:.3f})"
             )

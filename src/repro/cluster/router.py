@@ -181,6 +181,11 @@ class ClusterService:
                 "reloads": 0,
             }
         )
+        # load_report() qps windows: shard -> (monotonic, queries counter)
+        # from the previous report, so qps is a delta over a real window
+        # rather than a lifetime average
+        self._load_prev: dict[int, tuple[float, int]] = {}
+        self._t_created = time.monotonic()
 
     # ------------------------------------------------------------------ #
     # Construction
@@ -787,6 +792,7 @@ class ClusterService:
                 "plans": agg.data.get("plans", 0),
                 "rows_padded": agg.data.get("rows_padded", 0),
                 "plan_hit_rate": agg.data.get("plan_hit_rate", 0.0),
+                "fused_fallbacks": agg.data.get("fused_fallbacks", 0),
             }
         )
         # replica-tier health (present only when shards are ReplicaSets)
@@ -794,7 +800,98 @@ class ClusterService:
                     "failovers", "replica_deaths", "replica_respawns"):
             if key in agg.data:
                 snap.data[key] = agg.data[key]
+        # cluster-wide workload heat + worker slow-query entries, merged
+        # shard-wise exactly like the latency histogram
+        snap.heat = agg.heat
+        snap.slow = agg.slow
         return snap
+
+    def load_report(self, top_k: int = 10) -> dict:
+        """Versioned per-shard skew report for the balancer / ``/debug/heat``.
+
+        Entirely derived from worker-side :class:`~repro.obs.HeatSketch`
+        and ``QueryStats`` counters, so it works identically over thread,
+        process, and remote transports (heat rides the stats wire header).
+        QPS is a delta against the previous ``load_report`` call's counter
+        snapshot; the first call uses the service's lifetime as the window.
+        """
+        with self._lock:
+            workers = list(self.pool.workers)
+        with ThreadPoolExecutor(max_workers=max(len(workers), 1)) as ex:
+            snaps = list(ex.map(lambda w: w.stats(), workers))
+        now = time.monotonic()
+        admission = self.admission.snapshot()
+        queue = admission.get("queue_depth_per_shard", ())
+        shed = admission.get("shed_per_shard", ())
+        health = self.shard_health()
+        vocab = getattr(self.routing, "vocab", None)
+        shards = []
+        for i, snap in enumerate(snaps):
+            queries = int(snap.data.get("queries", 0))
+            t_prev, q_prev = self._load_prev.get(
+                i, (self._t_created, 0)
+            )
+            window_s = max(now - t_prev, 1e-9)
+            self._load_prev[i] = (now, queries)
+            heat = snap.heat
+            top = []
+            if heat is not None:
+                for kw_id, count, err in heat.topk.top(top_k):
+                    word = None
+                    if vocab is not None:
+                        try:
+                            word = vocab.id_to_word[kw_id]
+                        except (IndexError, TypeError):
+                            word = None
+                    top.append(
+                        {
+                            "kw_id": int(kw_id),
+                            "keyword": word,
+                            "count": int(count),
+                            "err": int(err),
+                        }
+                    )
+            row = {
+                "shard": i,
+                "transport": health[i]["transport"] if i < len(health) else "?",
+                "queries": queries,
+                "qps": round(max(queries - q_prev, 0) / window_s, 3),
+                "window_s": round(window_s, 3),
+                "queue_depth": int(queue[i]) if i < len(queue) else 0,
+                "shed": int(shed[i]) if i < len(shed) else 0,
+                "generation": (
+                    self.generations[i] if i < len(self.generations) else 0
+                ),
+                "replicas": health[i]["replicas"] if i < len(health) else 1,
+                "replicas_live": (
+                    health[i]["replicas_live"] if i < len(health) else 1
+                ),
+                "p50_ms": round(snap.percentile(50), 3),
+                "p99_ms": round(snap.percentile(99), 3),
+                "top_keywords": top,
+                "doc_heat": (
+                    list(heat.doc_counts) if heat is not None else []
+                ),
+                "heat_queries": (
+                    int(heat.queries) if heat is not None else 0
+                ),
+            }
+            shards.append(row)
+        qps = [row["qps"] for row in shards]
+        hottest = int(max(range(len(qps)), key=qps.__getitem__)) if qps else -1
+        mean_qps = (sum(qps) / len(qps)) if qps else 0.0
+        return {
+            "version": 1,
+            "kind": "xks-load-report",
+            "ts_ms": round(time.time() * 1e3, 3),
+            "num_shards": len(shards),
+            "hottest_shard": hottest,
+            # max/mean qps: 1.0 = perfectly balanced, grows with skew
+            "skew": round(max(qps) / mean_qps, 3) if mean_qps > 0 else 1.0,
+            "admitted": int(admission.get("admitted", 0)),
+            "shed_total": int(admission.get("shed", 0)),
+            "shards": shards,
+        }
 
     def close(self, timeout: float = 30.0) -> None:
         """Stop admitting, drain every worker, finish gathers, shut down.

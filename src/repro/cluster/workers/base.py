@@ -42,7 +42,7 @@ import numpy as np
 
 from repro.core.engine import QueryStats
 from repro.core.idlist import ContainmentTable
-from repro.obs import TRACER, LatencyHistogram, parse_traceparent
+from repro.obs import TRACER, HeatSketch, LatencyHistogram, parse_traceparent
 
 from ..partition import ShardSpec
 from .proto import load_array, read_frame, write_frame
@@ -277,6 +277,7 @@ class RpcWorker:
                 fut.set_result((load_array(payload), int(msg["full"])))
             elif op == "stats":
                 hist = msg.get("hist")
+                heat = msg.get("heat")
                 fut.set_result(
                     QueryStats(
                         data=dict(msg["data"]),
@@ -288,6 +289,8 @@ class RpcWorker:
                             if hist
                             else {}
                         ),
+                        heat=HeatSketch.from_dict(heat) if heat else None,
+                        slow=list(msg.get("slow", ())),
                     )
                 )
             else:

@@ -208,15 +208,20 @@ def serve_stream(
                 reply(hdr, dump_array(docs_k))
             elif op == "stats":
                 snap = state.svc.stats()
-                reply(
-                    {
-                        "id": rid, "op": "stats", "ok": True,
-                        "data": snap.data,
-                        # kept for old clients; "hist" is authoritative
-                        "latencies": snap.latencies_ms,
-                        "hist": snap.hist.to_dict(),
-                    }
-                )
+                hdr = {
+                    "id": rid, "op": "stats", "ok": True,
+                    "data": snap.data,
+                    # kept for old clients; "hist" is authoritative
+                    "latencies": snap.latencies_ms,
+                    "hist": snap.hist.to_dict(),
+                }
+                # workload heat + slow-query entries ride the same header;
+                # unknown fields are ignored by older peers
+                if snap.heat is not None:
+                    hdr["heat"] = snap.heat.to_dict()
+                if snap.slow:
+                    hdr["slow"] = snap.slow
+                reply(hdr)
             elif op == "drain":
                 if drain_closes:
                     state.drain_service()  # flushes; replies already sent

@@ -29,7 +29,13 @@ from repro.api import (
     validate_index,
     validate_semantics,
 )
-from repro.obs import TRACER, LatencyHistogram, emit_phases
+from repro.obs import (
+    TRACER,
+    BucketMismatchError,
+    HeatSketch,
+    LatencyHistogram,
+    emit_phases,
+)
 
 from . import io as index_io
 from . import search_base, search_vec
@@ -57,10 +63,16 @@ class QueryStats:
     """
 
     MAX_LATENCIES = 10_000
+    MAX_SLOW = 32
 
     data: dict = field(default_factory=dict)
     latencies_ms: list = field(default_factory=list)
     hist: LatencyHistogram = field(default_factory=LatencyHistogram)
+    # workload heat (keyword sketches + doc-range histogram) and the
+    # worker-side slow-query entries; both ride the stats wire header like
+    # ``hist`` and merge across workers in :meth:`merge`
+    heat: HeatSketch | None = None
+    slow: list = field(default_factory=list)
 
     def __post_init__(self):
         # legacy construction (old wire peers, tests) passes samples only:
@@ -116,7 +128,13 @@ class QueryStats:
         and dropped otherwise.  Non-numeric values keep the first
         occurrence.  Latency histograms merge bucket-wise (exact, unlike
         concatenating bounded sample lists); the legacy sample windows
-        still concatenate for callers that read them directly.
+        still concatenate for callers that read them directly.  A peer
+        whose histogram has diverged bucket edges (typed
+        :class:`~repro.obs.BucketMismatchError`) is counted under
+        ``hist_edge_mismatches`` and its raw sample window is folded
+        instead — a version skew never silently corrupts the rollup.
+        Heat sketches merge sketch-wise; slow-query entries concatenate,
+        trimmed to the worst :data:`MAX_SLOW`.
         """
         merged = cls()
         for part in parts:
@@ -128,16 +146,39 @@ class QueryStats:
                 else:
                     merged.data[key] = merged.data.get(key, 0) + val
             if part.hist.count:
-                merged.hist.merge(part.hist)
+                try:
+                    merged.hist.merge(part.hist)
+                except BucketMismatchError:
+                    merged.data["hist_edge_mismatches"] = (
+                        merged.data.get("hist_edge_mismatches", 0) + 1
+                    )
+                    if part.latencies_ms:
+                        merged.hist.merge(
+                            LatencyHistogram.from_samples(part.latencies_ms)
+                        )
             elif part.latencies_ms:  # window assigned after construction
                 merged.hist.merge(LatencyHistogram.from_samples(part.latencies_ms))
             merged.latencies_ms.extend(part.latencies_ms)
+            part_heat = getattr(part, "heat", None)
+            if part_heat is not None:
+                if merged.heat is None:
+                    merged.heat = part_heat.copy()
+                else:
+                    merged.heat.merge(part_heat)
+            part_slow = getattr(part, "slow", None)
+            if part_slow:
+                merged.slow.extend(part_slow)
         launches = merged.data.get("plan_launches_total", 0)
         if launches:
             merged.data["plan_hit_rate"] = round(
                 merged.data.get("plan_hits", 0) / launches, 4
             )
         del merged.latencies_ms[: -cls.MAX_LATENCIES]
+        if merged.slow:
+            merged.slow.sort(
+                key=lambda r: r.get("latency_ms", 0.0), reverse=True
+            )
+            del merged.slow[cls.MAX_SLOW:]
         return merged
 
 
@@ -160,6 +201,10 @@ class KeywordSearchEngine:
             self.base, self.cluster = BaseIndex(tree), None
         self.plan_cache = plan_cache or PlanCache()
         self.last_stats = QueryStats()
+        # workload heat over this engine's keyword/node-id space; recorded
+        # on every query path (direct and through QueryService) behind the
+        # always-on ``repro.obs.heat.ENABLED`` switch
+        self.heat = HeatSketch(num_nodes=tree.num_nodes)
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -258,7 +303,19 @@ class KeywordSearchEngine:
         kws = self.keyword_ids(keywords)
         if any(k < 0 for k in kws) or not kws:
             return np.zeros(0, dtype=np.int64)
+        ids = self._execute(kws, semantics, index, backend, algorithm, phases)
+        self.heat.record(kws, ids)
+        return ids
 
+    def _execute(
+        self,
+        kws: list[int],
+        semantics: str,
+        index: str,
+        backend: str,
+        algorithm: str | None,
+        phases: list | None,
+    ) -> np.ndarray:
         if index == "tree":
             if backend == "scalar":
                 algo = algorithm or f"fwd_{semantics}"

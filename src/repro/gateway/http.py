@@ -16,10 +16,17 @@ Routes:
     (when the service reports ``shard_health``) per-shard replica
     liveness — 503 while any shard has zero live replicas;
   * ``GET /metrics`` — the gateway's :class:`~repro.obs.MetricsRegistry`
-    in the Prometheus text exposition format (request/query/error
-    counters, cache gauges, latency histograms, service rollup);
+    in the OpenMetrics text exposition format (request/query/error
+    counters, cache gauges, latency histograms with per-bucket trace-id
+    exemplars, service rollup, plan-cache hit/miss/launch counters);
   * ``GET /debug/slow?n=10`` — the ``n`` slowest recent queries with
-    their assembled span trees (see :mod:`repro.obs.trace`).
+    their assembled span trees (see :mod:`repro.obs.trace`), plus the
+    worker-side slow entries shipped home on the stats wire;
+  * ``GET /debug/heat?top=10`` — ``ClusterService.load_report()``: the
+    versioned per-shard skew report (qps, queue depth, heavy-hitter
+    keywords, doc-range heat, replica health);
+  * ``GET /debug/timeseries?name=&last=`` — the bounded ring-buffer
+    metric history sampled by :class:`~repro.obs.TimeSeriesStore`.
 
 Tracing: every ``POST /query`` opens a root span when tracing is on
 (honoring an incoming W3C-style ``traceparent`` header), propagates the
@@ -49,6 +56,7 @@ from __future__ import annotations
 
 import asyncio
 import json
+import os
 import threading
 import time
 from urllib.parse import parse_qs
@@ -56,11 +64,27 @@ from urllib.parse import parse_qs
 from repro.api import Query
 from repro.cluster.admission import Overloaded
 from repro.cluster.workers import WorkerDied
-from repro.obs import NULL_SPAN, TRACER, MetricsRegistry, SlowQueryLog
+from repro.obs import (
+    NULL_SPAN,
+    TRACER,
+    MetricsRegistry,
+    SlowQueryLog,
+    TimeSeriesStore,
+    TraceSampler,
+)
 
 from .cache import EdgeCache
 
 MAX_BODY_BYTES = 1 << 20  # a keyword query has no business being >1MiB
+
+
+def _env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, "") or default)
+    except ValueError:
+        return default
+
+
 _REASONS = {
     200: "OK", 400: "Bad Request", 404: "Not Found",
     405: "Method Not Allowed", 413: "Payload Too Large",
@@ -74,6 +98,16 @@ class HttpError(Exception):
         self.status = status
         self.message = message
         super().__init__(f"{status}: {message}")
+
+
+class _TextResponse:
+    """A text body with an explicit content type (``/metrics``)."""
+
+    __slots__ = ("text", "ctype")
+
+    def __init__(self, text: str, ctype: str):
+        self.text = text
+        self.ctype = ctype
 
 
 class Gateway:
@@ -97,6 +131,10 @@ class Gateway:
         own_service: bool = False,
         trace: bool = True,
         slow_log_entries: int = 256,
+        trace_max_per_s: float | None = None,
+        trace_slow_ms: float | None = None,
+        ts_interval_s: float | None = None,
+        ts_capacity: int | None = None,
     ):
         self.service = service
         self.cache = EdgeCache(cache_entries)
@@ -114,7 +152,35 @@ class Gateway:
         # actually arrives, so this is the one switch that matters end to end)
         self.trace = bool(trace)
         self.slow_log = SlowQueryLog(slow_log_entries)
+        # head sampling caps trace volume under load (default unlimited);
+        # tail retention still keeps slow/error requests in the slow log
+        self.sampler = TraceSampler(
+            max_per_s=(
+                trace_max_per_s
+                if trace_max_per_s is not None
+                else _env_float("XKS_TRACE_MAX_PER_S", 0.0)
+            ),
+            slow_ms=(
+                trace_slow_ms
+                if trace_slow_ms is not None
+                else _env_float("XKS_TRACE_SLOW_MS", 100.0)
+            ),
+        )
         self.registry = MetricsRegistry(prefix="xks_")
+        self.timeseries = TimeSeriesStore(
+            self.registry,
+            interval_s=(
+                ts_interval_s
+                if ts_interval_s is not None
+                else _env_float("XKS_TS_INTERVAL_S", 5.0)
+            ),
+            capacity=(
+                int(ts_capacity)
+                if ts_capacity is not None
+                else int(_env_float("XKS_TS_CAPACITY", 720))
+            ),
+            pre_sample=self._pre_sample,
+        )
         self._metric_counters = {
             k: self.registry.counter(
                 f"gateway_{k}_total", f"gateway {k} since startup"
@@ -187,6 +253,7 @@ class Gateway:
             raise boot_err[0]
         if self._server is None:
             raise RuntimeError(f"gateway did not bind within {timeout}s")
+        self.timeseries.start()
         return self
 
     def close(self, timeout: float = 10.0) -> None:
@@ -194,6 +261,7 @@ class Gateway:
             if self._closed:
                 return
             self._closed = True
+        self.timeseries.stop()
         if self._loop is not None and self._loop.is_running():
             self._loop.call_soon_threadsafe(self._loop.stop)
         if self._thread is not None:
@@ -268,7 +336,10 @@ class Gateway:
         return method, path, headers, body
 
     async def _respond(self, writer, status: int, obj, keep: bool):
-        if isinstance(obj, str):  # /metrics: Prometheus text exposition
+        if isinstance(obj, _TextResponse):  # /metrics: OpenMetrics text
+            body = obj.text.encode()
+            ctype = obj.ctype
+        elif isinstance(obj, str):  # plain Prometheus text exposition
             body = obj.encode()
             ctype = "text/plain; version=0.0.4; charset=utf-8"
         else:
@@ -308,15 +379,58 @@ class Gateway:
                 n = int(parse_qs(qs).get("n", ["10"])[0])
             except (ValueError, IndexError):
                 n = 10
-            return 200, {
-                "entries": len(self.slow_log),
-                "slowest": self.slow_log.worst(n),
-            }
+            return await self._debug_slow(n)
+        if path == "/debug/heat":
+            if method != "GET":
+                raise HttpError(405, "GET /debug/heat")
+            try:
+                top = int(parse_qs(qs).get("top", ["10"])[0])
+            except (ValueError, IndexError):
+                top = 10
+            return await self._debug_heat(top)
+        if path == "/debug/timeseries":
+            if method != "GET":
+                raise HttpError(405, "GET /debug/timeseries")
+            params = parse_qs(qs)
+            name = params.get("name", [None])[0]
+            try:
+                last_raw = params.get("last", [None])[0]
+                last = int(last_raw) if last_raw is not None else None
+            except ValueError:
+                last = None
+            return 200, self.timeseries.snapshot(name=name, last=last)
         if path == "/healthz":
             if method != "GET":
                 raise HttpError(405, "GET /healthz")
             return self._healthz()
         raise HttpError(404, f"no route {path!r}")
+
+    async def _debug_slow(self, n: int):
+        """Gateway-local slow queries + worker-side entries off the wire."""
+        out = {
+            "entries": len(self.slow_log),
+            "slowest": self.slow_log.worst(n),
+            "sampler": self.sampler.snapshot(),
+        }
+        stats = getattr(self.service, "stats", None)
+        if callable(stats):
+            try:
+                snap = await asyncio.get_running_loop().run_in_executor(
+                    None, stats
+                )
+                out["workers"] = list(getattr(snap, "slow", ()) or ())[:n]
+            except Exception as e:  # a debug read never 500s the gateway
+                out["workers_error"] = str(e)
+        return 200, out
+
+    async def _debug_heat(self, top: int):
+        lr = getattr(self.service, "load_report", None)
+        if not callable(lr):
+            raise HttpError(404, "service does not expose load_report")
+        report = await asyncio.get_running_loop().run_in_executor(
+            None, lr, top
+        )
+        return 200, report
 
     def _healthz(self):
         out = {
@@ -348,14 +462,16 @@ class Gateway:
         self._count("queries")
         t0 = time.perf_counter()
         # root span: a fresh trace, or a child of the client's traceparent
-        # header (or of the one already on the query body)
+        # header (or of the one already on the query body).  The head
+        # sampler may veto under load; tail retention in _finish_request
+        # still records slow requests the head pass dropped.
         span = (
             TRACER.root(
                 "gateway.request",
                 traceparent=headers.get("traceparent") or q.traceparent,
                 semantics=q.semantics,
             )
-            if self.trace
+            if self.trace and self.sampler.head()
             else NULL_SPAN
         )
         if span.ctx is not None:
@@ -375,20 +491,20 @@ class Gateway:
         try:
             fut = self.service.submit(q)
         except Overloaded as e:
-            self._abort_trace(span, "Overloaded")
+            self._abort_trace(span, "Overloaded", q, t0)
             raise HttpError(429, str(e)) from e
         except ValueError as e:
-            self._abort_trace(span, f"ValueError: {e}")
+            self._abort_trace(span, f"ValueError: {e}", q, t0)
             raise HttpError(400, str(e)) from e
         try:
             res = await asyncio.wait_for(
                 asyncio.wrap_future(fut), self.request_timeout
             )
         except WorkerDied as e:
-            self._abort_trace(span, f"WorkerDied: {e}")
+            self._abort_trace(span, f"WorkerDied: {e}", q, t0)
             raise HttpError(503, str(e)) from e
         except asyncio.TimeoutError as e:
-            self._abort_trace(span, "timeout")
+            self._abort_trace(span, "timeout", q, t0)
             raise HttpError(
                 504, f"query exceeded {self.request_timeout}s"
             ) from e
@@ -407,8 +523,25 @@ class Gateway:
         collecting here sees the complete cross-process tree.
         """
         lat = (time.perf_counter() - t0) * 1e3
-        self._m_latency.observe(lat)
+        # the histogram bucket keeps the trace id as its OpenMetrics
+        # exemplar, so a /metrics scrape links a bucket to /debug/slow
+        self._m_latency.observe(
+            lat, exemplar=span.trace_id if span.ctx is not None else None
+        )
         if span.ctx is None:
+            # tail retention: head sampling dropped the trace, but a slow
+            # request still earns a (span-less) slow-log entry
+            if self.trace and self.sampler.keep(lat, sampled=False):
+                self.slow_log.add(
+                    {
+                        "trace_id": None,
+                        "latency_ms": round(lat, 3),
+                        "keywords": list(q.keywords),
+                        "semantics": q.semantics,
+                        "cached": cached,
+                        "spans": [],
+                    }
+                )
             return
         span.end(cached=cached)
         spans = TRACER.collect(span.trace_id)
@@ -424,12 +557,26 @@ class Gateway:
             }
         )
 
-    def _abort_trace(self, span, error: str) -> None:
-        """End + discard a failed request's trace (never block the error)."""
+    def _abort_trace(self, span, error: str, q: Query | None = None,
+                     t0: float | None = None) -> None:
+        """End a failed request's trace; errored traces are always retained."""
         if span.ctx is None:
             return
         span.end(error=error)
-        TRACER.collect(span.trace_id)  # pop: keep the store tidy
+        spans = TRACER.collect(span.trace_id)  # pop: keep the store tidy
+        lat = (time.perf_counter() - t0) * 1e3 if t0 is not None else 0.0
+        if self.sampler.keep(lat, error=True):
+            self.slow_log.add(
+                {
+                    "trace_id": span.trace_id,
+                    "latency_ms": round(lat, 3),
+                    "error": error,
+                    "keywords": list(q.keywords) if q is not None else [],
+                    "semantics": q.semantics if q is not None else None,
+                    "cached": False,
+                    "spans": TRACER.build_tree(spans),
+                }
+            )
 
     async def _stats(self):
         # per-worker stats collection blocks on RPC round-trips: keep the
@@ -451,7 +598,16 @@ class Gateway:
             None, self.service.stats
         )
         self._sync_registry(snap)
-        return 200, self.registry.expose()
+        return 200, _TextResponse(
+            self.registry.expose(openmetrics=True),
+            "application/openmetrics-text; version=1.0.0; charset=utf-8",
+        )
+
+    def _pre_sample(self) -> None:
+        """TimeSeriesStore tick hook: pull the cluster rollup into the
+        registry so sampled series cover service counters, not just
+        gateway-local ones (failures are swallowed by the store)."""
+        self._sync_registry(self.service.stats())
 
     def _sync_registry(self, snap) -> None:
         """Mirror scrape-time state into the registry (gauges + rollups).
@@ -471,6 +627,18 @@ class Gateway:
             self.registry.gauge(
                 f"cluster_{k}", f"service rollup counter {k}"
             ).set(float(v))
+        # monotonic engine counters exposed with proper counter typing:
+        # the plan cache's hit/miss/launch totals and the fused-kernel
+        # fallback count, summed over shards by the rollup
+        for key, metric in (
+            ("plan_hits", "plan_cache_hits_total"),
+            ("plan_misses", "plan_cache_misses_total"),
+            ("plan_launches_total", "plan_cache_launches_total"),
+            ("fused_fallbacks", "fused_fallbacks_total"),
+        ):
+            self.registry.counter(
+                metric, f"engine {key} summed over shards"
+            ).set(float(snap.data.get(key, 0)))
         hist = getattr(snap, "hist", None)
         if hist is not None:
             self.registry.histogram(

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import re
 import threading
+import time
 
 import numpy as np
 
@@ -42,6 +43,26 @@ def sanitize_metric_name(name: str) -> str:
     return name
 
 
+class BucketMismatchError(ValueError):
+    """Merging histograms with different bucket edges would misaccount.
+
+    Every process is supposed to share :data:`DEFAULT_BUCKETS_MS`; a
+    mismatch means a peer on a diverged build, and silently re-binning its
+    mass would corrupt the percentile estimates on both sides.  Callers
+    that roll up across versions (``QueryStats.merge``) catch this, count
+    it, and fold the peer's raw sample window instead.
+    """
+
+    def __init__(self, expected: tuple[float, ...], got: tuple[float, ...]):
+        self.expected = tuple(expected)
+        self.got = tuple(got)
+        super().__init__(
+            f"histogram bucket edges mismatch: expected {len(self.expected)} "
+            f"edges {self.expected[:3]}..., got {len(self.got)} edges "
+            f"{self.got[:3]}..."
+        )
+
+
 class LatencyHistogram:
     """Fixed-bucket histogram of latencies (milliseconds).
 
@@ -60,26 +81,21 @@ class LatencyHistogram:
         self.count = 0
 
     # ------------------------------------------------------------------ #
-    def observe(self, ms: float) -> None:
+    def observe(self, ms: float) -> int:
+        """Record one sample; returns the index of the bucket it landed in
+        (callers that keep per-bucket exemplars reuse it)."""
         ms = float(ms)
         i = int(np.searchsorted(self.edges, ms, side="left"))
         self.counts[i] += 1
         self.sum += ms
         self.count += 1
+        return i
 
     def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
         if other.edges != self.edges:
-            # mismatched edges (a peer on an older build): degrade to
-            # re-observing its mass at bucket upper bounds rather than drop
-            for i, c in enumerate(other.counts):
-                if c:
-                    edge = other.edges[min(i, len(other.edges) - 1)]
-                    self.counts[
-                        int(np.searchsorted(self.edges, edge, side="left"))
-                    ] += c
-            self.sum += other.sum
-            self.count += other.count
-            return self
+            # a peer on a diverged build: refuse loudly instead of silently
+            # re-binning its mass into the wrong buckets
+            raise BucketMismatchError(self.edges, other.edges)
         for i, c in enumerate(other.counts):
             self.counts[i] += c
         self.sum += other.sum
@@ -171,7 +187,7 @@ class Counter:
         with self._lock:
             self.value = float(v)
 
-    def expose(self) -> list[str]:
+    def expose(self, openmetrics: bool = False) -> list[str]:
         v = self.value
         return [f"{self.name} {_fmt(v)}"]
 
@@ -195,12 +211,18 @@ class Gauge:
         with self._lock:
             self.value += n
 
-    def expose(self) -> list[str]:
+    def expose(self, openmetrics: bool = False) -> list[str]:
         return [f"{self.name} {_fmt(self.value)}"]
 
 
 class Histogram:
-    """Registry-held latency histogram (Prometheus ``histogram`` type)."""
+    """Registry-held latency histogram (Prometheus ``histogram`` type).
+
+    Each bucket retains its most recent **exemplar** — ``(value, trace
+    id, unix ts)`` of the last observation that landed there — rendered in
+    the OpenMetrics exposition so a scrape links a p99-bucket spike
+    straight to one trace in ``GET /debug/slow``.
+    """
 
     kind = "histogram"
 
@@ -215,32 +237,59 @@ class Histogram:
         self.help = help
         self._lock = lock
         self.hist = LatencyHistogram(edges)
+        # exemplars[i] mirrors counts[i]: (value_ms, trace_id, unix_ts)
+        self._exemplars: list[tuple[float, str, float] | None] = [None] * (
+            len(self.hist.edges) + 1
+        )
 
-    def observe(self, ms: float) -> None:
+    def observe(self, ms: float, exemplar: str | None = None) -> None:
         with self._lock:
-            self.hist.observe(ms)
+            i = self.hist.observe(ms)
+            if exemplar:
+                self._exemplars[i] = (float(ms), str(exemplar), time.time())
 
     def replace(self, hist: LatencyHistogram) -> None:
         """Adopt an externally maintained histogram (scrape-time sync)."""
         with self._lock:
             self.hist = hist.copy()
+            if len(self._exemplars) != len(self.hist.counts):
+                self._exemplars = [None] * len(self.hist.counts)
 
     def percentile(self, p: float) -> float:
         with self._lock:
             return self.hist.percentile(p)
 
-    def expose(self) -> list[str]:
+    def exemplars(self) -> list[tuple[float, str, float] | None]:
+        with self._lock:
+            return list(self._exemplars)
+
+    def expose(self, openmetrics: bool = False) -> list[str]:
         with self._lock:
             h = self.hist.copy()
+            ex = list(self._exemplars) if openmetrics else None
         lines = []
         cum = 0
-        for edge, c in zip(h.edges, h.counts):
+        for i, (edge, c) in enumerate(zip(h.edges, h.counts)):
             cum += c
-            lines.append(f'{self.name}_bucket{{le="{_fmt(edge)}"}} {cum}')
-        lines.append(f'{self.name}_bucket{{le="+Inf"}} {h.count}')
+            lines.append(
+                f'{self.name}_bucket{{le="{_fmt(edge)}"}} {cum}'
+                + _exemplar_suffix(ex, i)
+            )
+        lines.append(
+            f'{self.name}_bucket{{le="+Inf"}} {h.count}'
+            + _exemplar_suffix(ex, len(h.edges))
+        )
         lines.append(f"{self.name}_sum {_fmt(h.sum)}")
         lines.append(f"{self.name}_count {h.count}")
         return lines
+
+
+def _exemplar_suffix(exemplars, i: int) -> str:
+    """OpenMetrics exemplar clause: `` # {trace_id="..."} value ts``."""
+    if not exemplars or exemplars[i] is None:
+        return ""
+    value, trace_id, ts = exemplars[i]
+    return f' # {{trace_id="{trace_id}"}} {_fmt(value)} {ts:.3f}'
 
 
 def _fmt(v: float) -> str:
@@ -294,7 +343,29 @@ class MetricsRegistry:
         with self._lock:
             return sorted(self._metrics)
 
-    def expose(self) -> str:
+    def samples(self) -> list[tuple[str, str, float]]:
+        """Flat ``(name, kind, value)`` rows for time-series sampling.
+
+        Histograms contribute two counter-shaped components
+        (``<name>_count`` and ``<name>_sum``) so their rates are
+        plottable alongside plain counters.
+        """
+        with self._lock:
+            metrics = [self._metrics[k] for k in sorted(self._metrics)]
+        rows: list[tuple[str, str, float]] = []
+        for m in metrics:
+            if isinstance(m, Histogram):
+                with m._lock:
+                    count, total = m.hist.count, m.hist.sum
+                rows.append((f"{m.name}_count", "counter", float(count)))
+                rows.append((f"{m.name}_sum", "counter", float(total)))
+            else:
+                rows.append((m.name, m.kind, float(m.value)))
+        return rows
+
+    def expose(self, openmetrics: bool = False) -> str:
+        """The text exposition: Prometheus classic, or OpenMetrics when
+        ``openmetrics=True`` (histogram bucket exemplars + ``# EOF``)."""
         with self._lock:
             metrics = [self._metrics[k] for k in sorted(self._metrics)]
         lines: list[str] = []
@@ -302,5 +373,7 @@ class MetricsRegistry:
             if m.help:
                 lines.append(f"# HELP {m.name} {m.help}")
             lines.append(f"# TYPE {m.name} {m.kind}")
-            lines.extend(m.expose())
+            lines.extend(m.expose(openmetrics=openmetrics))
+        if openmetrics:
+            lines.append("# EOF")
         return "\n".join(lines) + "\n"

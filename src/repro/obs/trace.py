@@ -375,6 +375,73 @@ def emit_phases(parent, phases: list[dict]) -> None:
     TRACER.emit_many(parent, phases)
 
 
+class TraceSampler:
+    """Head rate-limiting + tail retention, so tracing survives load.
+
+    Two decisions per request:
+
+      * :meth:`head` — should this request propagate trace context
+        downstream?  A token bucket refilled at ``max_per_s`` (burst =
+        2s of budget); ``max_per_s <= 0`` means unlimited (the default —
+        every request fully traced, exactly the pre-sampler behavior).
+        Under load the bucket empties and excess requests run with only
+        their cheap root span.
+      * :meth:`keep` — should the finished trace be retained (slow-log
+        entry, span tree)?  **Slow and errored traces are always kept**,
+        even when head sampling suppressed their downstream spans — the
+        tail-based half: the requests worth debugging never vanish because
+        the system was busy.
+
+    Env knobs (read by the gateway): ``XKS_TRACE_MAX_PER_S`` (default 0 =
+    unlimited) and ``XKS_TRACE_SLOW_MS`` (default 100).
+    """
+
+    def __init__(self, max_per_s: float = 0.0, slow_ms: float = 100.0):
+        self.max_per_s = float(max_per_s)
+        self.slow_ms = float(slow_ms)
+        self._lock = threading.Lock()
+        self._burst = max(self.max_per_s, 1.0) * 2.0
+        self._tokens = self._burst
+        self._t_last = time.monotonic()
+        self.sampled = 0
+        self.suppressed = 0
+
+    def head(self) -> bool:
+        """True = trace this request end to end (token available)."""
+        if self.max_per_s <= 0:
+            with self._lock:
+                self.sampled += 1
+            return True
+        now = time.monotonic()
+        with self._lock:
+            self._tokens = min(
+                self._burst,
+                self._tokens + (now - self._t_last) * self.max_per_s,
+            )
+            self._t_last = now
+            if self._tokens >= 1.0:
+                self._tokens -= 1.0
+                self.sampled += 1
+                return True
+            self.suppressed += 1
+            return False
+
+    def keep(
+        self, latency_ms: float, error: bool = False, sampled: bool = True
+    ) -> bool:
+        """True = retain the finished trace (always for slow/error)."""
+        return bool(error) or float(latency_ms) >= self.slow_ms or bool(sampled)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "max_per_s": self.max_per_s,
+                "slow_ms": self.slow_ms,
+                "sampled": self.sampled,
+                "suppressed": self.suppressed,
+            }
+
+
 class SlowQueryLog:
     """Bounded ring of the slowest recent queries, with their span trees."""
 

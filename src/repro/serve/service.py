@@ -32,6 +32,7 @@ router (:mod:`repro.cluster`) builds on.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from concurrent.futures import Future, InvalidStateError
@@ -43,7 +44,12 @@ from repro.api import Query, QueryResult, chain_future, validate_backend, valida
 from repro.core.engine import KeywordSearchEngine, QueryStats
 from repro.core.search_base import dag_search
 from repro.core.search_dag import dag_search_vec_multi
-from repro.obs import TRACER, emit_phases
+from repro.obs import TRACER, SlowQueryLog, emit_phases, parse_traceparent
+
+# worker-side slow-query threshold (ms): drained queries at or above it
+# land in the service's bounded SlowQueryLog, shipped home in the stats
+# wire header so GET /debug/slow covers process/remote shards too
+DEFAULT_SLOW_LOG_MS = float(os.environ.get("XKS_SLOW_LOG_MS", "25.0"))
 
 # drain backends: how one admission window reaches the index.  "jax" and
 # "pallas" both run the batched vectorized search through the engine's
@@ -65,6 +71,7 @@ class _Pending:
     future: Future
     t_submit: float = field(default_factory=time.perf_counter)
     trace: object = None  # TraceContext | traceparent str | None
+    words: object = None  # the caller's raw keywords (slow-log context)
 
 
 class QueryService:
@@ -76,6 +83,7 @@ class QueryService:
         max_batch: int = 64,
         batch_window_ms: float = 2.0,
         backend: str = "jax",
+        slow_log_ms: float | None = None,
     ):
         if engine.cluster is None:
             raise ValueError("QueryService needs an engine with the DAG index")
@@ -100,6 +108,12 @@ class QueryService:
         self._stats = QueryStats(
             data={"queries": 0, "batches": 0, "launches": 0, "max_batch_seen": 0}
         )
+        # queries drained at or above this latency are logged for the
+        # cluster-wide GET /debug/slow (entries ride the stats header)
+        self._slow_ms = (
+            DEFAULT_SLOW_LOG_MS if slow_log_ms is None else float(slow_log_ms)
+        )
+        self._slow = SlowQueryLog(64)
         self._thread = threading.Thread(
             target=self._drain_loop, name="query-service-drain", daemon=True
         )
@@ -129,6 +143,7 @@ class QueryService:
         item = _Pending(
             self.engine.keyword_ids(keywords), semantics, fut,
             trace=trace if TRACER.enabled else None,
+            words=keywords,
         )
         with self._wake:
             # the closed check lives under the same lock close() takes, so a
@@ -201,6 +216,10 @@ class QueryService:
             )
             snap.data["queue_depth"] = len(self._pending)
         snap.data.update(self.engine.plan_cache.snapshot())
+        # workload heat + worker-side slow entries ride the same snapshot
+        # (and, for RPC transports, the same stats reply header as `hist`)
+        snap.heat = self.engine.heat.copy()
+        snap.slow = self._slow.worst(QueryStats.MAX_SLOW)
         return snap
 
     @property
@@ -258,6 +277,7 @@ class QueryService:
             for semantics, items in by_sem.items():
                 self._run_group(semantics, items)
             done = time.perf_counter()
+            slow: list[_Pending] = []
             with self._lock:
                 d = self._stats.data
                 d["queries"] += len(window)
@@ -265,7 +285,31 @@ class QueryService:
                 d["launches"] += self.engine.plan_cache.launches - launches0
                 d["max_batch_seen"] = max(d["max_batch_seen"], len(window))
                 for item in window:
-                    self._stats.record_latency((done - item.t_submit) * 1e3)
+                    lat = (done - item.t_submit) * 1e3
+                    self._stats.record_latency(lat)
+                    if lat >= self._slow_ms:
+                        slow.append(item)
+            for item in slow:  # rare: only queries over the threshold
+                self._log_slow(item, (done - item.t_submit) * 1e3, len(window))
+
+    def _log_slow(self, item: _Pending, lat_ms: float, batch: int) -> None:
+        """One slow-query entry (ships home in the stats wire header)."""
+        words = item.words
+        if isinstance(words, str):
+            words = words.split()
+        ctx = parse_traceparent(item.trace) if item.trace is not None else None
+        self._slow.add(
+            {
+                "latency_ms": round(lat_ms, 3),
+                "keywords": list(words) if words is not None else None,
+                "kw_ids": [int(k) for k in item.kws],
+                "semantics": item.semantics,
+                "backend": self.backend,
+                "batch": int(batch),
+                "ts_ms": round(time.time() * 1e3, 3),
+                "trace_id": ctx.trace_id if ctx is not None else None,
+            }
+        )
 
     @staticmethod
     def _deliver(fut: Future, result=None, exc: Exception | None = None) -> None:
@@ -311,7 +355,9 @@ class QueryService:
             # spans are recorded BEFORE futures resolve, so a caller that
             # collects the trace right after .result() sees the full tree
             self._emit_spans(semantics, items, traced, phases, t_run)
+        heat = self.engine.heat
         for it, res in zip(items, results):
+            heat.record(it.kws, res)
             self._deliver(it.future, result=res)
 
     def _emit_spans(

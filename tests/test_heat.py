@@ -1,0 +1,632 @@
+"""PR 9 observability: workload heat, time series, exemplars, sampling.
+
+Covers the four new surfaces end to end:
+
+  * the heat sketches themselves (count-min linearity under merge,
+    space-saving error bounds, HeatSketch wire round-trip);
+  * the TimeSeriesStore ring (counter deltas, wraparound, thread smoke);
+  * typed LatencyHistogram merge errors and their QueryStats fold;
+  * OpenMetrics exposition with per-bucket trace-id exemplars;
+  * the TraceSampler head/tail contract;
+  * heat + slow entries riding QueryService stats and the cluster wire;
+  * the gateway's /debug/heat and /debug/timeseries routes;
+  * the acceptance scenario: a replicated process-transport cluster under
+    skewed traffic, where ``load_report()`` must name the true hottest
+    shard and reproduce its per-keyword counts exactly.
+"""
+import http.client
+import json
+import re
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterService
+from repro.core import KeywordSearchEngine
+from repro.core.engine import QueryStats
+from repro.data import QUERIES, generate_discogs_tree
+from repro.gateway import Gateway
+from repro.obs import (
+    BucketMismatchError,
+    CountMinSketch,
+    HeatShapeError,
+    HeatSketch,
+    LatencyHistogram,
+    MetricsRegistry,
+    SpaceSaving,
+    TimeSeriesStore,
+    TraceSampler,
+    heat as heat_mod,
+)
+from repro.serve import QueryService
+
+N_RELEASES = 16
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_discogs_tree(n_releases=N_RELEASES, seed=5)
+
+
+def _req(gw, method, path, body=None, headers=None):
+    conn = http.client.HTTPConnection(gw.host, gw.port, timeout=120)
+    try:
+        payload = None if body is None else json.dumps(body)
+        conn.request(method, path, body=payload, headers=headers or {})
+        resp = conn.getresponse()
+        raw = resp.read().decode()
+        ctype = resp.getheader("Content-Type", "")
+        if ctype.startswith("application/json"):
+            return resp.status, json.loads(raw)
+        return resp.status, raw
+    finally:
+        conn.close()
+
+
+# --------------------------------------------------------------------------- #
+# Count-min sketch
+# --------------------------------------------------------------------------- #
+
+
+def _stream(rng, n, universe):
+    return [int(k) for k in rng.zipf(1.4, size=n) % universe]
+
+
+def test_cms_never_undercounts():
+    rng = np.random.default_rng(0)
+    keys = _stream(rng, 2000, 5000)
+    cms = CountMinSketch(width=256, depth=4)
+    for k in keys:
+        cms.add(k)
+    exact = {}
+    for k in keys:
+        exact[k] = exact.get(k, 0) + 1
+    for k, c in exact.items():
+        assert cms.estimate(k) >= c
+    assert cms.total == len(keys)
+
+
+def test_cms_merge_equals_recount_on_concatenated_streams():
+    """Linearity: merged tables give EXACTLY the concatenated estimates."""
+    rng = np.random.default_rng(1)
+    s1, s2 = _stream(rng, 1500, 3000), _stream(rng, 900, 3000)
+    a = CountMinSketch(width=128, depth=4)
+    b = CountMinSketch(width=128, depth=4)
+    both = CountMinSketch(width=128, depth=4)
+    for k in s1:
+        a.add(k)
+        both.add(k)
+    for k in s2:
+        b.add(k)
+        both.add(k)
+    a.merge(b)
+    assert a.table == both.table
+    assert a.total == both.total
+    for k in set(s1) | set(s2):
+        assert a.estimate(k) == both.estimate(k)
+
+
+def test_cms_merge_shape_mismatch_is_typed():
+    with pytest.raises(HeatShapeError):
+        CountMinSketch(width=128, depth=4).merge(
+            CountMinSketch(width=64, depth=4)
+        )
+    with pytest.raises(HeatShapeError):
+        CountMinSketch(width=128, depth=4).merge(
+            CountMinSketch(width=128, depth=2)
+        )
+
+
+def test_cms_wire_round_trip():
+    cms = CountMinSketch(width=32, depth=3)
+    for k in (1, 1, 2, 7, 7, 7):
+        cms.add(k)
+    back = CountMinSketch.from_dict(json.loads(json.dumps(cms.to_dict())))
+    assert back.table == cms.table
+    assert back.total == cms.total
+
+
+# --------------------------------------------------------------------------- #
+# Space-saving top-K
+# --------------------------------------------------------------------------- #
+
+
+def test_space_saving_exact_when_under_capacity():
+    ss = SpaceSaving(capacity=8)
+    for k, n in ((1, 10), (2, 5), (3, 1)):
+        for _ in range(n):
+            ss.add(k)
+    assert ss.top() == [(1, 10, 0), (2, 5, 0), (3, 1, 0)]
+
+
+def test_space_saving_bounds_over_capacity():
+    """count >= true and count - err <= true for every reported key."""
+    rng = np.random.default_rng(2)
+    keys = _stream(rng, 3000, 400)
+    exact = {}
+    for k in keys:
+        exact[k] = exact.get(k, 0) + 1
+    ss = SpaceSaving(capacity=16)
+    for k in keys:
+        ss.add(k)
+    rows = ss.top()
+    assert len(rows) <= 16
+    for key, count, err in rows:
+        true = exact.get(key, 0)
+        assert count >= true
+        assert count - err <= true
+    # the undisputed heavy hitter must be reported, with the top count
+    heaviest = max(exact, key=exact.get)
+    assert rows[0][0] == heaviest
+
+
+def test_space_saving_merge_keeps_bounds():
+    rng = np.random.default_rng(3)
+    s1, s2 = _stream(rng, 1200, 300), _stream(rng, 1200, 300)
+    exact = {}
+    for k in s1 + s2:
+        exact[k] = exact.get(k, 0) + 1
+    a, b = SpaceSaving(capacity=16), SpaceSaving(capacity=16)
+    for k in s1:
+        a.add(k)
+    for k in s2:
+        b.add(k)
+    a.merge(b)
+    for key, count, err in a.top():
+        true = exact.get(key, 0)
+        assert count >= true
+        assert count - err <= true
+    with pytest.raises(HeatShapeError):
+        a.merge(SpaceSaving(capacity=8))
+
+
+# --------------------------------------------------------------------------- #
+# HeatSketch
+# --------------------------------------------------------------------------- #
+
+
+def test_heat_sketch_records_and_round_trips():
+    h = HeatSketch(num_nodes=1000, doc_buckets=10)
+    h.record([3, 5], np.asarray([100, 250], dtype=np.int64))
+    h.record([3], np.asarray([900, 999], dtype=np.int64))
+    h.record([-1, 3], None)  # unresolved keyword is skipped, query counted
+    assert h.queries == 3
+    assert h.estimate(3) == 3
+    assert h.top_keywords(2)[0] == (3, 3, 0)
+    # ids 100..250 span buckets 1..2 of 10 over 1000 nodes; 900..999 -> 9
+    assert h.doc_counts[1] == 1 and h.doc_counts[2] == 1
+    assert h.doc_counts[9] == 1
+    back = HeatSketch.from_dict(json.loads(json.dumps(h.to_dict())))
+    assert back.queries == h.queries
+    assert back.doc_counts == h.doc_counts
+    assert back.cms.table == h.cms.table
+    assert back.topk.top() == h.topk.top()
+
+
+def test_heat_sketch_merge_sums_everything():
+    a, b = HeatSketch(num_nodes=100), HeatSketch(num_nodes=200)
+    a.record([1], np.asarray([0, 99]))
+    b.record([1, 2], np.asarray([0, 199]))
+    a.merge(b)
+    assert a.queries == 2
+    assert a.num_nodes == 200
+    assert a.estimate(1) == 2 and a.estimate(2) == 1
+    with pytest.raises(HeatShapeError):
+        a.merge(HeatSketch(num_nodes=100, doc_buckets=8))
+
+
+def test_heat_enabled_flag_gates_recording():
+    h = HeatSketch(num_nodes=10)
+    assert heat_mod.ENABLED  # default on
+    try:
+        heat_mod.set_enabled(False)
+        h.record([1], np.asarray([5]))
+        assert h.queries == 0 and h.estimate(1) == 0
+    finally:
+        heat_mod.set_enabled(True)
+    h.record([1], np.asarray([5]))
+    assert h.queries == 1 and h.estimate(1) == 1
+
+
+# --------------------------------------------------------------------------- #
+# TimeSeriesStore
+# --------------------------------------------------------------------------- #
+
+
+def test_timeseries_counter_deltas_and_gauge_values():
+    reg = MetricsRegistry(prefix="t_")
+    c = reg.counter("reqs_total", "requests")
+    g = reg.gauge("depth", "queue depth")
+    clock = iter(float(i) for i in range(100))
+    ts = TimeSeriesStore(reg, interval_s=0, capacity=8,
+                         clock=lambda: next(clock))
+    c.inc(5)
+    g.set(3)
+    ts.sample_once()
+    c.inc(2)
+    g.set(7)
+    ts.sample_once()
+    assert [v for _, v in ts.series("t_reqs_total")] == [5.0, 2.0]
+    assert [v for _, v in ts.series("t_depth")] == [3.0, 7.0]
+    # aligned: both series share the tick timestamps
+    assert [t for t, _ in ts.series("t_depth")] == [
+        t for t, _ in ts.series("t_reqs_total")
+    ]
+    snap = ts.snapshot(name="reqs", last=1)
+    assert snap["kind"] == "xks-timeseries" and snap["ticks"] == 2
+    assert list(snap["series"]) == ["t_reqs_total"]
+    assert snap["series"]["t_reqs_total"]["points"] == [[1.0, 2.0]]
+
+
+def test_timeseries_counter_reset_falls_back_to_raw_value():
+    reg = MetricsRegistry(prefix="t_")
+    c = reg.counter("x_total", "x")
+    ts = TimeSeriesStore(reg, interval_s=0, capacity=8, clock=lambda: 0.0)
+    c.inc(10)
+    ts.sample_once()
+    c.set(3)  # process-restart shaped: counter went backwards
+    ts.sample_once()
+    assert [v for _, v in ts.series("t_x_total")] == [10.0, 3.0]
+
+
+def test_timeseries_ring_wraparound_keeps_newest():
+    reg = MetricsRegistry(prefix="t_")
+    g = reg.gauge("v", "v")
+    clock = iter(float(i) for i in range(100))
+    ts = TimeSeriesStore(reg, interval_s=0, capacity=4,
+                         clock=lambda: next(clock))
+    for i in range(10):
+        g.set(i)
+        ts.sample_once()
+    pts = ts.series("t_v")
+    assert len(pts) == 4  # bounded
+    assert [v for _, v in pts] == [6.0, 7.0, 8.0, 9.0]  # newest survive
+    assert ts.ticks == 10
+
+
+def test_timeseries_sampler_thread_smoke():
+    reg = MetricsRegistry(prefix="t_")
+    reg.counter("n_total", "n").inc()
+    calls = []
+    ts = TimeSeriesStore(reg, interval_s=0.02, capacity=16,
+                         pre_sample=lambda: calls.append(1))
+    ts.start()
+    deadline = time.monotonic() + 5.0
+    while ts.ticks < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    ts.stop()
+    assert ts.ticks >= 2
+    assert calls  # pre_sample ran before ticks
+    # a failing pre_sample must not kill sampling
+    ts2 = TimeSeriesStore(reg, interval_s=0, capacity=4,
+                          pre_sample=lambda: 1 / 0)
+    ts2.sample_once()
+    assert ts2.ticks == 1
+    # interval <= 0 disables the thread entirely
+    assert TimeSeriesStore(reg, interval_s=0).start()._thread is None
+
+
+# --------------------------------------------------------------------------- #
+# Typed histogram-merge errors
+# --------------------------------------------------------------------------- #
+
+
+def test_query_stats_merge_counts_edge_mismatches_without_losing_mass():
+    a = QueryStats(data={"queries": 1})
+    a.record_latency(5.0)
+    b = QueryStats(
+        data={"queries": 2},
+        latencies_ms=[1.0, 100.0],
+        hist=LatencyHistogram(edges=(1.0, 10.0)),
+    )
+    for v in (1.0, 100.0):
+        b.hist.observe(v)
+    merged = QueryStats.merge([a, b])
+    assert merged.data["queries"] == 3
+    assert merged.data["hist_edge_mismatches"] == 1
+    # the foreign part's samples were folded, not dropped
+    assert merged.hist.count == 3
+    assert merged.hist.sum == pytest.approx(106.0)
+
+
+# --------------------------------------------------------------------------- #
+# TraceSampler
+# --------------------------------------------------------------------------- #
+
+
+def test_trace_sampler_unlimited_by_default():
+    s = TraceSampler()
+    assert all(s.head() for _ in range(100))
+    assert s.snapshot()["sampled"] == 100
+    assert s.snapshot()["suppressed"] == 0
+
+
+def test_trace_sampler_rate_limits_head_and_keeps_tail():
+    s = TraceSampler(max_per_s=5.0, slow_ms=50.0)
+    decisions = [s.head() for _ in range(100)]
+    assert any(decisions) and not all(decisions)  # burst-bounded
+    snap = s.snapshot()
+    assert snap["sampled"] + snap["suppressed"] == 100
+    # tail contract: slow or errored queries are retained even unsampled
+    assert s.keep(10.0, sampled=True)
+    assert not s.keep(10.0, sampled=False)
+    assert s.keep(51.0, sampled=False)  # slow
+    assert s.keep(0.1, error=True, sampled=False)  # errored
+
+
+# --------------------------------------------------------------------------- #
+# OpenMetrics exemplars
+# --------------------------------------------------------------------------- #
+
+_EXEMPLAR = re.compile(
+    r'_bucket\{le="[^"]+"\} \d+ # \{trace_id="t-abc"\} [0-9.]+ [0-9.]+$'
+)
+
+
+def test_openmetrics_exposition_has_exemplars_and_eof():
+    reg = MetricsRegistry(prefix="xks_")
+    h = reg.histogram("lat_ms", "latency")
+    h.observe(3.0, exemplar="t-abc")
+    h.observe(250.0, exemplar="t-abc")
+    h.observe(1.0)  # no exemplar: bucket line stays bare
+    om = reg.expose(openmetrics=True)
+    lines = om.strip().splitlines()
+    assert lines[-1] == "# EOF"
+    assert any(_EXEMPLAR.search(ln) for ln in lines)
+    assert "# TYPE xks_lat_ms histogram" in om
+    # the classic exposition stays exemplar-free for old scrapers
+    assert "trace_id" not in reg.expose()
+    assert "# EOF" not in reg.expose()
+    ex = [e for e in h.exemplars() if e]
+    assert {e[1] for e in ex} == {"t-abc"}
+
+
+# --------------------------------------------------------------------------- #
+# Heat + slow entries through QueryService stats
+# --------------------------------------------------------------------------- #
+
+
+def test_query_service_stats_carry_heat_and_slow(corpus):
+    eng = KeywordSearchEngine(corpus)
+    with QueryService(eng, batch_window_ms=0.5, slow_log_ms=0.0) as svc:
+        for kws in ("vinyl", "vinyl", "jazz"):
+            svc.query(kws)
+        snap = svc.stats()
+    assert snap.heat is not None and snap.heat.queries == 3
+    vinyl = eng.tree.vocab.get("vinyl")
+    assert snap.heat.estimate(vinyl) == 2
+    assert sum(snap.heat.doc_counts) > 0
+    # slow_log_ms=0 marks every drained query slow
+    assert snap.slow and len(snap.slow) <= QueryStats.MAX_SLOW
+    entry = snap.slow[0]
+    assert entry["latency_ms"] >= 0.0
+    assert entry["keywords"] and entry["semantics"] == "slca"
+    # entries are JSON-safe: they ride the stats wire header
+    json.dumps(snap.slow)
+
+
+def test_engine_direct_path_records_heat(corpus):
+    eng = KeywordSearchEngine(corpus)
+    eng.query("vinyl reissue", backend="scalar")
+    assert eng.heat.queries == 1
+    assert eng.heat.estimate(eng.tree.vocab.get("vinyl")) == 1
+
+
+def test_query_stats_merge_merges_heat_and_trims_slow():
+    a, b = QueryStats(data={}), QueryStats(data={})
+    a.heat = HeatSketch(num_nodes=10)
+    a.heat.record([1], np.asarray([5]))
+    b.heat = HeatSketch(num_nodes=10)
+    b.heat.record([1], np.asarray([7]))
+    a.slow = [{"latency_ms": float(i)} for i in range(30)]
+    b.slow = [{"latency_ms": float(100 + i)} for i in range(30)]
+    merged = QueryStats.merge([a, b])
+    assert merged.heat.queries == 2 and merged.heat.estimate(1) == 2
+    # merge must not mutate the parts
+    assert a.heat.queries == 1
+    assert len(merged.slow) == QueryStats.MAX_SLOW
+    assert merged.slow[0]["latency_ms"] == 129.0  # worst first
+
+
+# --------------------------------------------------------------------------- #
+# Gateway endpoints
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def heat_gateway(corpus):
+    svc = ClusterService.from_tree(corpus, 2, batch_window_ms=0.5)
+    with Gateway(svc, own_service=True, ts_interval_s=0).start() as gw:
+        for kws in ("vinyl", "vinyl reissue", "jazz"):
+            status, obj = _req(gw, "POST", "/query", {"keywords": kws})
+            assert status == 200, obj
+        yield gw
+
+
+def test_debug_heat_reports_shard_skew(heat_gateway):
+    status, report = _req(heat_gateway, "GET", "/debug/heat?top=5")
+    assert status == 200
+    assert report["version"] == 1 and report["kind"] == "xks-load-report"
+    assert report["num_shards"] == 2 and len(report["shards"]) == 2
+    assert 0 <= report["hottest_shard"] < 2
+    row = report["shards"][report["hottest_shard"]]
+    assert row["queries"] > 0 and row["qps"] > 0
+    assert row["replicas_live"] >= 1
+    words = {kw["keyword"] for kw in row["top_keywords"]}
+    assert words & {"vinyl", "reissue", "jazz"}
+    for kw in row["top_keywords"]:
+        assert kw["count"] >= 1 and kw["err"] == 0
+    assert len(row["doc_heat"]) == HeatSketch.DOC_BUCKETS
+
+
+def test_debug_timeseries_endpoint(heat_gateway):
+    heat_gateway.timeseries.sample_once()
+    heat_gateway.timeseries.sample_once()
+    status, snap = _req(heat_gateway, "GET", "/debug/timeseries?last=2")
+    assert status == 200
+    assert snap["kind"] == "xks-timeseries" and snap["ticks"] >= 2
+    series = snap["series"]
+    assert any(name.startswith("xks_cluster_") for name in series)
+    for s in series.values():
+        assert s["kind"] in ("counter", "gauge")
+        assert len(s["points"]) <= 2
+    # substring filter narrows the series set
+    status, one = _req(
+        heat_gateway, "GET", "/debug/timeseries?name=gateway_queries"
+    )
+    assert status == 200
+    assert all("gateway_queries" in name for name in one["series"])
+
+
+def test_metrics_openmetrics_with_exemplars_and_counters(heat_gateway):
+    status, text = _req(heat_gateway, "GET", "/metrics")
+    assert status == 200 and isinstance(text, str)
+    lines = text.strip().splitlines()
+    assert lines[-1] == "# EOF"
+    # the request histogram carries trace-id exemplars on hit buckets
+    assert re.search(
+        r'xks_gateway_request_latency_ms_bucket\{le="[^"]+"\} \d+ '
+        r'# \{trace_id="[0-9a-f]{32}"\}', text,
+    )
+    # explicit engine counters with counter typing
+    for name in (
+        "xks_plan_cache_hits_total",
+        "xks_plan_cache_misses_total",
+        "xks_plan_cache_launches_total",
+        "xks_fused_fallbacks_total",
+    ):
+        assert f"# TYPE {name} counter" in text
+        assert re.search(rf"^{name} [0-9.e+]+$", text, re.M)
+
+
+def test_debug_slow_includes_worker_entries(corpus):
+    svc = ClusterService.from_tree(corpus, 2, batch_window_ms=0.5)
+    for w in svc.pool.workers:  # thread transport: flag every query slow
+        w.service._slow_ms = 0.0
+    with Gateway(svc, own_service=True, ts_interval_s=0).start() as gw:
+        for kws in ("vinyl", "jazz"):
+            status, obj = _req(gw, "POST", "/query", {"keywords": kws})
+            assert status == 200, obj
+        status, dbg = _req(gw, "GET", "/debug/slow?n=5")
+    assert status == 200
+    assert dbg["entries"] >= 2 and dbg["slowest"]
+    assert dbg["sampler"]["sampled"] >= 2
+    # worker-side entries (slow_log_ms=0: every drained query qualifies)
+    assert dbg.get("workers"), dbg
+    assert dbg["workers"][0]["latency_ms"] >= 0.0
+
+
+def test_gateway_head_sampling_suppresses_traces_keeps_metrics(corpus):
+    svc = ClusterService.from_tree(corpus, 1, batch_window_ms=0.5)
+    with Gateway(
+        svc, own_service=True, ts_interval_s=0,
+        trace_max_per_s=0.001, trace_slow_ms=1e9,
+    ).start() as gw:
+        # burst capacity is ~2 tokens; everything after is unsampled
+        results = []
+        for _ in range(10):
+            status, obj = _req(gw, "POST", "/query", {"keywords": "vinyl"})
+            assert status == 200, obj
+            results.append("trace_id" in obj)
+        assert not all(results)  # head sampler suppressed some traces
+        snap = gw.sampler.snapshot()
+        assert snap["suppressed"] > 0
+        # latency metrics still observed for unsampled requests
+        assert gw._m_latency.hist.count == 10
+
+
+# --------------------------------------------------------------------------- #
+# Acceptance: skewed traffic over replicated process shards
+# --------------------------------------------------------------------------- #
+
+
+def _single_shard_words(svc, max_per_shard=6):
+    """Per-shard single-keyword probes: words routed to exactly one shard."""
+    routing = svc.routing
+    by_shard = {}
+    for word in routing.vocab.id_to_word:
+        kid = routing.vocab.get(word)
+        if kid < 0 or routing.at_root(kid):
+            continue
+        mask = routing.fanout([kid])
+        if mask and (mask & (mask - 1)) == 0:  # exactly one shard bit
+            shard = mask.bit_length() - 1
+            bucket = by_shard.setdefault(shard, [])
+            if len(bucket) < max_per_shard:
+                bucket.append(word)
+    return by_shard
+
+
+def test_load_report_identifies_hottest_shard_exactly(corpus):
+    svc = ClusterService.from_tree(
+        corpus, 2, transport="process", replicas=2,
+        hedge_ms=float("inf"),  # no hedging: per-shard counts stay exact
+        batch_window_ms=0.5,
+    )
+    try:
+        by_shard = _single_shard_words(svc)
+        assert set(by_shard) == {0, 1}, by_shard
+        hot = max(by_shard, key=lambda s: len(by_shard[s]))
+        cold = 1 - hot
+        # skewed Zipf-shaped plan: the hot shard sees 4x the traffic, with
+        # a known exact per-keyword count (<= 32 distinct words per shard,
+        # so the space-saving summaries stay exact: err == 0)
+        plan = []
+        for rank, word in enumerate(by_shard[hot]):
+            plan += [word] * (16 >> min(rank, 3))  # 16, 8, 4, 2, 2, ...
+        plan += by_shard[cold][:2]  # trickle on the cold shard
+        exact = {}
+        for word in plan:
+            exact[word] = exact.get(word, 0) + 1
+        # sequential blocking queries: no coalescing, no hedging — every
+        # submit lands exactly once on exactly one shard's heat sketch
+        for word in plan:
+            svc.query(word, "slca")
+        report = svc.load_report(top_k=32)
+        assert report["version"] == 1 and report["kind"] == "xks-load-report"
+        hot_total = sum(exact[w] for w in by_shard[hot] if w in exact)
+        cold_total = len(by_shard[cold][:2])
+        assert report["hottest_shard"] == hot
+        assert report["skew"] > 1.0
+        rows = {row["shard"]: row for row in report["shards"]}
+        assert rows[hot]["queries"] == hot_total
+        assert rows[cold]["queries"] == cold_total
+        # machine-check the heavy hitters against the exact counts
+        got = {
+            kw["keyword"]: (kw["count"], kw["err"])
+            for kw in rows[hot]["top_keywords"]
+        }
+        for word in by_shard[hot]:
+            if word in exact:
+                assert got[word] == (exact[word], 0), (word, got)
+        # ranked by count, heaviest first
+        counts = [kw["count"] for kw in rows[hot]["top_keywords"]]
+        assert counts == sorted(counts, reverse=True)
+        # doc heat recorded on the hot shard
+        assert sum(rows[hot]["doc_heat"]) > 0
+        assert rows[hot]["replicas"] == 2 and rows[hot]["replicas_live"] == 2
+        # the report is JSON-serializable end to end
+        json.dumps(report)
+        # a second report uses the delta window: no new traffic -> qps 0
+        report2 = svc.load_report()
+        rows2 = {row["shard"]: row for row in report2["shards"]}
+        assert rows2[hot]["qps"] == 0.0
+    finally:
+        svc.close()
+
+
+def test_cluster_stats_merge_heat_across_process_workers(corpus):
+    """Heat survives the RPC wire: process workers -> merged rollup."""
+    svc = ClusterService.from_tree(
+        corpus, 2, transport="process", batch_window_ms=0.5
+    )
+    try:
+        for q, (_cat, kws) in list(QUERIES.items())[:4]:
+            svc.query(kws, "slca")
+        snap = svc.stats()
+        assert snap.heat is not None
+        assert snap.heat.queries >= 4
+        assert snap.data["fused_fallbacks"] >= 0
+    finally:
+        svc.close()

@@ -27,6 +27,7 @@ from repro.data import generate_discogs_tree
 from repro.gateway import Gateway
 from repro.obs import (
     DEFAULT_BUCKETS_MS,
+    BucketMismatchError,
     LatencyHistogram,
     MetricsRegistry,
     SlowQueryLog,
@@ -213,14 +214,17 @@ def test_histogram_merge_equals_union():
         assert a.percentile(p) == pytest.approx(both.percentile(p))
 
 
-def test_histogram_merge_mismatched_edges_keeps_mass():
+def test_histogram_merge_mismatched_edges_raises_typed_error():
     a = LatencyHistogram()
     old = LatencyHistogram(edges=(1.0, 10.0, 100.0))
     for v in (0.5, 5.0, 50.0, 5000.0):
         old.observe(v)
-    a.merge(old)
-    assert a.count == 4
-    assert a.sum == pytest.approx(old.sum)
+    with pytest.raises(BucketMismatchError) as ei:
+        a.merge(old)
+    assert ei.value.expected == a.edges
+    assert ei.value.got == old.edges
+    assert isinstance(ei.value, ValueError)  # old except-clauses still catch
+    assert a.count == 0  # refused merge leaves the target untouched
 
 
 def test_histogram_dict_round_trip():
