@@ -57,7 +57,13 @@ import time
 import numpy as np
 
 from benchmarks.common import N_RELEASES
-from repro.cluster import ClusterService, Overloaded, build_cluster
+from repro.cluster import (
+    ClusterService,
+    Overloaded,
+    PlacementPlan,
+    build_cluster,
+    repartition_publish,
+)
 from repro.cluster.workers.server import launch_cluster_servers
 from repro.core import KeywordSearchEngine
 from repro.data import QUERIES, generate_discogs_tree
@@ -459,6 +465,75 @@ def run() -> None:
                 finally:
                     timer.cancel()
                     os.kill(pid, signal.SIGCONT)  # idempotent if already up
+
+    # ------------- rebalance: live split->merge round trip ------------- #
+    # The elastic rebalancer's serving cost: steady-state qps on a 2-shard
+    # cluster, then the SAME live service is split 2->4 and merged back
+    # 4->2 (two repartition_publish layout transactions) under a steady
+    # query stream.  The roundtrip row's speedup column carries
+    # qps(after)/qps(baseline) — compare.py --checks rebalance gates it
+    # >= 0.95 — and its shed column counts in-flight client errors across
+    # both swaps (gated == 0: the layout transaction drops nothing).  The
+    # corpus is deliberately small: this measures the swap mechanism's
+    # residue, not index scale.
+    reb_tree = generate_discogs_tree(n_releases=120 if SMOKE else 240, seed=2)
+    heads = [kws for _, kws in QUERIES.values()]
+    reb_work = [heads[i % len(heads)] for i in range(BURST)]
+    with tempfile.TemporaryDirectory() as art3:
+        build_cluster(reb_tree, 2, art3)
+        with ClusterService.from_dir(
+            art3, batch_window_ms=2.0, max_queue_per_shard=4096
+        ) as svc:
+            base = _bench(svc, reb_work, timed)
+            s = svc.stats().summary()
+            print(
+                f"rebalance_baseline,thread,{base:.0f},{s['p50_ms']},"
+                f"{s['p99_ms']},0.00,1.00,0"
+            )
+            errors: list[Exception] = []
+            stop = threading.Event()
+
+            def hammer():
+                i = 0
+                while not stop.is_set():
+                    try:
+                        svc.submit(heads[i % len(heads)], "slca").result(60)
+                    except Exception as e:  # gated == 0 by compare.py
+                        errors.append(e)
+                    i += 1
+
+            hammers = [threading.Thread(target=hammer) for _ in range(2)]
+            for t in hammers:
+                t.start()
+            try:
+                t0 = time.perf_counter()
+                repartition_publish(
+                    art3, reb_tree, PlacementPlan.balanced(reb_tree, 4),
+                    service=svc,
+                )
+                split_ms = (time.perf_counter() - t0) * 1e3
+                t0 = time.perf_counter()
+                repartition_publish(
+                    art3, reb_tree, PlacementPlan.balanced(reb_tree, 2),
+                    service=svc,
+                )
+                merge_ms = (time.perf_counter() - t0) * 1e3
+            finally:
+                stop.set()
+                for t in hammers:
+                    t.join(60)
+            after = _bench(svc, reb_work, timed)
+            s = svc.stats().summary()
+            ratio = after / max(base, 1e-9)
+            print(
+                f"# rebalance: split_converge_ms={split_ms:.0f} "
+                f"merge_converge_ms={merge_ms:.0f} "
+                f"inflight_errors={len(errors)} epoch={svc.layout_epoch}"
+            )
+            print(
+                f"rebalance_roundtrip,thread,{after:.0f},{s['p50_ms']},"
+                f"{s['p99_ms']},0.00,{ratio:.3f},{len(errors)}"
+            )
 
 
 if __name__ == "__main__":

@@ -20,6 +20,15 @@ Checks are selected with ``--checks`` (default ``steady,tracing``):
     column) must stay at least ``1 - --overhead-threshold``.  This is
     what licenses the workload HeatSketch to be always-on in the worker
     drain loop.
+  * **rebalance residue** (``--checks rebalance``) — within the *current*
+    report, the ``rebalance_roundtrip`` row (steady-state qps after a live
+    split 2->4 + merge 4->2 round trip) must keep its
+    qps(after)/qps(baseline) ratio — carried in its ``speedup_vs_mono``
+    column — at least ``1 - --overhead-threshold``, and its ``shed``
+    column (in-flight client errors across both layout swaps) must be 0.
+    This is the gate that keeps online repartitioning safe to run against
+    live traffic: the layout transaction may neither drop queries nor
+    leave the service slower than it found it.
   * **fused pipeline** (``--checks fused``) — the fused single-launch
     search must keep beating the chained per-query Pallas path.  Within
     the *current* report, the ``vec.zipf_batch.fused`` row's speedup
@@ -98,7 +107,8 @@ def main(argv=None) -> int:
     )
     ap.add_argument(
         "--checks", default="steady,tracing",
-        help="comma list of checks to run: steady, tracing, heat, fused",
+        help="comma list of checks to run: steady, tracing, heat, fused, "
+             "rebalance",
     )
     ap.add_argument(
         "--fused-floor", type=float, default=1.0,
@@ -107,7 +117,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     transport = args.transport or None
     checks = {c.strip() for c in args.checks.split(",") if c.strip()}
-    unknown = checks - {"steady", "tracing", "heat", "fused"}
+    unknown = checks - {"steady", "tracing", "heat", "fused", "rebalance"}
     if unknown:
         ap.error(f"unknown checks: {sorted(unknown)}")
 
@@ -183,6 +193,37 @@ def main(argv=None) -> int:
                 f"(floor {floor:.3f})"
             )
             failed |= ratio < floor
+
+    # ------- rebalance round-trip residue within the current report ------- #
+    if "rebalance" in checks:
+        base = find_row(current, "rebalance_baseline", transport)
+        rt = find_row(current, "rebalance_roundtrip", transport)
+        if base is None or rt is None:
+            print(
+                "FAIL: rebalance_baseline/rebalance_roundtrip rows missing "
+                "from current report"
+            )
+            failed = True
+        else:
+            try:
+                ratio = float(rt["speedup_vs_mono"])
+            except (KeyError, TypeError, ValueError):
+                ratio = _qps(rt) / max(_qps(base), 1e-9)
+            floor = 1.0 - args.overhead_threshold
+            verdict = "ok" if ratio >= floor else "FAIL"
+            print(
+                f"{verdict}: rebalance qps(after)/qps(baseline) = "
+                f"{_qps(rt):.0f}/{_qps(base):.0f} = {ratio:.3f} "
+                f"(floor {floor:.3f})"
+            )
+            failed |= ratio < floor
+            errors = int(float(rt.get("shed", 0) or 0))
+            verdict = "ok" if errors == 0 else "FAIL"
+            print(
+                f"{verdict}: rebalance in-flight errors across both layout "
+                f"swaps = {errors} (must be 0)"
+            )
+            failed |= errors != 0
 
     # ------- fused pipeline must keep beating the chained path ------- #
     if "fused" in checks:

@@ -27,8 +27,26 @@ from .manifest import (
     manifest_endpoints,
     rolling_publish,
     set_cluster_endpoints,
+    write_layout_artifacts,
 )
-from .partition import ShardSpec, partition_corpus, shard_tree, split_doc_ranges
+from .partition import (
+    ShardSpec,
+    balanced_bounds,
+    heat_weighted_bounds,
+    partition_corpus,
+    shard_tree,
+    specs_from_bounds,
+    split_doc_ranges,
+)
+from .rebalance import (
+    Action,
+    PlacementPlan,
+    apply_actions,
+    doc_heat_weights,
+    move_shard,
+    plan_rebalance,
+    repartition_publish,
+)
 from .router import ClusterService
 from .workers import (
     ProcessPool,
@@ -47,9 +65,11 @@ from .workers import (
 ShardWorker = ThreadWorker
 
 __all__ = [
+    "Action",
     "AdmissionController",
     "ClusterService",
     "Overloaded",
+    "PlacementPlan",
     "ProcessPool",
     "ProcessWorker",
     "ProtocolError",
@@ -63,14 +83,23 @@ __all__ = [
     "Worker",
     "WorkerDied",
     "WorkerPool",
+    "apply_actions",
+    "balanced_bounds",
     "build_cluster",
+    "doc_heat_weights",
+    "heat_weighted_bounds",
     "load_cluster",
     "load_cluster_layout",
     "manifest_endpoints",
     "migrate_cluster",
+    "move_shard",
     "partition_corpus",
+    "plan_rebalance",
+    "repartition_publish",
     "rolling_publish",
     "set_cluster_endpoints",
     "shard_tree",
+    "specs_from_bounds",
     "split_doc_ranges",
+    "write_layout_artifacts",
 ]

@@ -57,6 +57,25 @@ class AdmissionController:
             for s in shards:
                 self._depth[s] -= 1
 
+    def resized(self, num_shards: int) -> AdmissionController:
+        """A fresh controller for a new shard count (layout transaction).
+
+        Depths start empty — in-flight gathers release their slots into the
+        controller that admitted them, never into this one.  The cumulative
+        admitted/shed totals carry over so cluster-wide counters stay
+        monotonic across a repartition; per-shard shed counts map
+        positionally, with any truncated tail folded into the last shard
+        (old boundaries have no exact image in the new layout).
+        """
+        out = AdmissionController(num_shards, self.limit)
+        with self._lock:
+            out._admitted = self._admitted
+            n = min(len(self._shed), num_shards)
+            out._shed[:n] = self._shed[:n]
+            if len(self._shed) > num_shards and num_shards > 0:
+                out._shed[-1] += sum(self._shed[num_shards:])
+        return out
+
     def snapshot(self) -> dict:
         with self._lock:
             return {

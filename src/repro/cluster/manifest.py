@@ -82,6 +82,46 @@ def _vocab_from_blob(arr: np.ndarray) -> Vocab:
     return Vocab(word_to_id={w: i for i, w in enumerate(words)}, id_to_word=words)
 
 
+def _write_routing(
+    path: str, tree: XMLTree, specs: list[ShardSpec], token: str
+) -> tuple[str, np.ndarray, np.ndarray]:
+    """Write + fsync a fresh routing npz; returns (file name, masks, root)."""
+    masks, root_kw_ids = routing_arrays(tree, specs)
+    routing_file = f"routing-{token}.npz"
+    np.savez(
+        os.path.join(path, routing_file),
+        vocab_blob=_vocab_blob(tree.vocab),
+        masks=masks,
+        root_kw_ids=root_kw_ids,
+    )
+    with open(os.path.join(path, routing_file), "rb") as f:
+        os.fsync(f.fileno())
+    return routing_file, masks, root_kw_ids
+
+
+def write_layout_artifacts(
+    path: str, tree: XMLTree, specs: list[ShardSpec]
+) -> tuple[list[str], str]:
+    """Index + write every shard dir and the routing npz for one layout.
+
+    Shared by :func:`build_cluster` and
+    :func:`repro.cluster.rebalance.repartition_publish`: all files land
+    under fresh token names and the *cluster directory entry* is fsynced
+    before returning — the manifest that will name these files must never
+    commit ahead of their directory entries (a crash in between would leave
+    it referencing unlinked paths).  Returns (shard dir names, routing file
+    name); nothing is committed.
+    """
+    token = os.urandom(4).hex()
+    shard_dirs = [f"shard-{token}-{spec.index:04d}" for spec in specs]
+    for spec, d in zip(specs, shard_dirs):
+        engine = KeywordSearchEngine.from_tree(shard_tree(tree, spec))
+        engine.save(os.path.join(path, d))
+    routing_file, _, _ = _write_routing(path, tree, specs, token)
+    index_io.fsync_dir(path)
+    return shard_dirs, routing_file
+
+
 def build_cluster(tree: XMLTree, num_shards: int, path: str) -> dict:
     """Partition ``tree``, index every shard, and publish a cluster artifact.
 
@@ -95,33 +135,25 @@ def build_cluster(tree: XMLTree, num_shards: int, path: str) -> dict:
     """
     os.makedirs(path, exist_ok=True)
     prev_dirs: list[str] = []
+    prev_epoch = -1
     try:
         prev = index_io.load_cluster_manifest(path)
         prev_dirs = [obj["dir"] for obj in prev["shards"]]
+        prev_epoch = int(prev.get("layout_epoch", 0))
     except (OSError, ValueError, KeyError):
         pass  # first publish, or unreadable/old-format manifest
-    token = os.urandom(4).hex()
     specs = split_doc_ranges(tree, num_shards)
-    shard_dirs = [f"shard-{token}-{spec.index:04d}" for spec in specs]
-    for spec, d in zip(specs, shard_dirs):
-        engine = KeywordSearchEngine.from_tree(shard_tree(tree, spec))
-        engine.save(os.path.join(path, d))
-    masks, root_kw_ids = routing_arrays(tree, specs)
-    routing_file = f"routing-{token}.npz"
-    np.savez(
-        os.path.join(path, routing_file),
-        vocab_blob=_vocab_blob(tree.vocab),
-        masks=masks,
-        root_kw_ids=root_kw_ids,
-    )
-    with open(os.path.join(path, routing_file), "rb") as f:
-        os.fsync(f.fileno())
+    shard_dirs, routing_file = write_layout_artifacts(path, tree, specs)
     manifest = {
         "num_shards": len(specs),
         "num_docs": int(specs[-1].doc_hi),
         "num_nodes": tree.num_nodes,
         "num_keywords": len(tree.vocab),
         "routing_file": routing_file,
+        # a full republish over an existing cluster is a (degenerate)
+        # repartition: edge caches keyed on the epoch must not trust
+        # entries stamped under the previous layout
+        "layout_epoch": prev_epoch + 1,
         "shards": [
             dict(spec.to_json(), dir=d, generation=0, endpoint=None, replicas=[])
             for spec, d in zip(specs, shard_dirs)
@@ -254,20 +286,17 @@ def rolling_publish(path: str, tree: XMLTree, *, service=None) -> dict:
             "build_cluster instead"
         )
     token = os.urandom(4).hex()
-    masks, root_kw_ids = routing_arrays(tree, specs)
-    routing_file = f"routing-{token}.npz"
-    np.savez(
-        os.path.join(path, routing_file),
-        vocab_blob=_vocab_blob(tree.vocab),
-        masks=masks,
-        root_kw_ids=root_kw_ids,
-    )
-    with open(os.path.join(path, routing_file), "rb") as f:
-        os.fsync(f.fileno())
+    routing_file, masks, root_kw_ids = _write_routing(path, tree, specs, token)
     for i, spec in enumerate(specs):
         new_dir = f"shard-{token}-{spec.index:04d}"
         engine = KeywordSearchEngine.from_tree(shard_tree(tree, spec))
         engine.save(os.path.join(path, new_dir))
+        # the new shard dir's (and, on the first pass, the routing npz's)
+        # directory entries must be durable before the manifest names them:
+        # the files are fsynced above, but a crash could still lose the
+        # entries themselves and leave the committed manifest referencing
+        # unlinked paths
+        index_io.fsync_dir(path)
         old_dir = manifest["shards"][i]["dir"]
         manifest["shards"][i]["dir"] = new_dir
         manifest["shards"][i]["generation"] = (

@@ -81,32 +81,105 @@ def doc_roots(tree: XMLTree) -> np.ndarray:
     return np.where(tree.parent == 0)[0].astype(np.int64)
 
 
-def split_doc_ranges(tree: XMLTree, num_shards: int) -> list[ShardSpec]:
-    """Contiguous document ranges, balanced by total node count per shard."""
+def specs_from_bounds(tree: XMLTree, bounds: list[int]) -> list[ShardSpec]:
+    """Shard specs for *arbitrary* contiguous document boundaries.
+
+    ``bounds`` is ``[0, c1, ..., n_docs]`` — strictly increasing document
+    ordinals; shard ``s`` owns documents ``[bounds[s], bounds[s+1])``.  This
+    is the repartition primitive: any boundary vector a placement plan
+    proposes becomes a valid layout here, with the same contiguity (and
+    therefore exactness) guarantees as the build-time balancer.
+    """
     roots = doc_roots(tree)
-    n_docs = roots.size
+    n_docs = int(roots.size)
     if n_docs == 0:
         raise ValueError("corpus tree has no documents (root has no children)")
-    num_shards = max(1, min(int(num_shards), n_docs, MAX_SHARDS))
-    sizes = tree.subtree_size[roots].astype(np.int64)
-    cum = np.cumsum(sizes)
-    # cut at the ideal node-count fractions, then clamp so the cuts stay
-    # strictly increasing and every shard keeps at least one document
-    # (num_shards <= n_docs makes both clamps always satisfiable)
-    bounds = [0]
-    for s in range(1, num_shards):
-        c = int(np.searchsorted(cum, cum[-1] * s / num_shards, side="left")) + 1
-        c = max(c, bounds[-1] + 1)
-        c = min(c, n_docs - (num_shards - s))
-        bounds.append(c)
-    bounds.append(n_docs)
+    bounds = [int(b) for b in bounds]
+    if (
+        len(bounds) < 2
+        or bounds[0] != 0
+        or bounds[-1] != n_docs
+        or any(a >= b for a, b in zip(bounds, bounds[1:]))
+    ):
+        raise ValueError(
+            f"doc bounds must be strictly increasing from 0 to {n_docs}, "
+            f"got {bounds}"
+        )
+    if len(bounds) - 1 > MAX_SHARDS:
+        raise ValueError(
+            f"{len(bounds) - 1} shards exceeds MAX_SHARDS={MAX_SHARDS}"
+        )
     specs = []
-    for s in range(num_shards):
+    for s in range(len(bounds) - 1):
         lo, hi = bounds[s], bounds[s + 1]
         start = int(roots[lo])
         end = int(roots[hi]) if hi < n_docs else tree.num_nodes
         specs.append(ShardSpec(s, lo, hi, start, end))
     return specs
+
+
+def balanced_bounds(weights: np.ndarray, num_shards: int) -> list[int]:
+    """Document boundaries cutting cumulative ``weights`` into equal shares.
+
+    Cuts land at the ideal weight fractions, then are clamped so they stay
+    strictly increasing and every shard keeps at least one document
+    (``num_shards <= len(weights)`` makes both clamps always satisfiable).
+    """
+    weights = np.asarray(weights, dtype=np.float64)
+    n_docs = int(weights.size)
+    num_shards = max(1, min(int(num_shards), n_docs, MAX_SHARDS))
+    cum = np.cumsum(weights)
+    total = float(cum[-1])
+    bounds = [0]
+    for s in range(1, num_shards):
+        c = int(np.searchsorted(cum, total * s / num_shards, side="left")) + 1
+        c = max(c, bounds[-1] + 1)
+        c = min(c, n_docs - (num_shards - s))
+        bounds.append(c)
+    bounds.append(n_docs)
+    return bounds
+
+
+def split_doc_ranges(tree: XMLTree, num_shards: int) -> list[ShardSpec]:
+    """Contiguous document ranges, balanced by total node count per shard."""
+    roots = doc_roots(tree)
+    if roots.size == 0:
+        raise ValueError("corpus tree has no documents (root has no children)")
+    sizes = tree.subtree_size[roots].astype(np.int64)
+    return specs_from_bounds(tree, balanced_bounds(sizes, num_shards))
+
+
+def heat_weighted_bounds(
+    tree: XMLTree,
+    num_shards: int,
+    doc_heat: np.ndarray | list[float],
+    *,
+    smoothing: float = 1.0,
+) -> list[int]:
+    """Document boundaries balancing *observed query heat*, not node count.
+
+    ``doc_heat[d]`` is a per-document load weight (e.g. expanded from the
+    load report's doc-range histogram, see
+    :func:`repro.cluster.rebalance.doc_heat_weights`).  ``smoothing`` adds a
+    uniform node-count-proportional floor so documents that saw zero traffic
+    still spread across shards instead of collapsing into one — with no heat
+    at all this degrades exactly to the node-count balancer.
+    """
+    roots = doc_roots(tree)
+    n_docs = int(roots.size)
+    if n_docs == 0:
+        raise ValueError("corpus tree has no documents (root has no children)")
+    heat = np.asarray(doc_heat, dtype=np.float64)
+    if heat.shape != (n_docs,):
+        raise ValueError(
+            f"doc_heat must have one weight per document ({n_docs}), "
+            f"got shape {heat.shape}"
+        )
+    sizes = tree.subtree_size[roots].astype(np.float64)
+    floor = sizes / sizes.sum() * max(float(smoothing), 0.0)
+    total = float(heat.sum())
+    load = heat / total if total > 0 else np.zeros(n_docs)
+    return balanced_bounds(load + floor, num_shards)
 
 
 def shard_tree(tree: XMLTree, spec: ShardSpec) -> XMLTree:

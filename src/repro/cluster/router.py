@@ -54,6 +54,7 @@ results.  Only the corpus root needs cross-shard reasoning:
 """
 from __future__ import annotations
 
+import logging
 import shutil
 import subprocess
 import tempfile
@@ -77,8 +78,17 @@ from .manifest import (
     manifest_endpoints,
 )
 from .partition import partition_corpus
-from .workers import ProcessPool, RemotePool, ThreadPool, Worker, WorkerPool
-from .workers.base import DEFAULT_OP_TIMEOUT
+from .workers import (
+    ProcessPool,
+    ProtocolError,
+    RemotePool,
+    ThreadPool,
+    Worker,
+    WorkerPool,
+)
+from .workers.base import DEFAULT_OP_TIMEOUT, WorkerDied
+
+log = logging.getLogger(__name__)
 
 # End-to-end deadline for one routed query (scatter, execute, gather,
 # merge) — deliberately wider than the per-RPC DEFAULT_OP_TIMEOUT, since a
@@ -99,12 +109,17 @@ class _Gather:
     __slots__ = (
         "key", "futures", "kw_ids", "semantics", "shards", "workers",
         "routing", "fanout_mask", "all_present", "t0s", "remaining",
-        "results", "error", "lock", "spans", "shard_spans",
+        "results", "error", "lock", "spans", "shard_spans", "admission",
     )
 
     def __init__(self, key, future, kw_ids, semantics, shards, workers,
-                 routing, fanout_mask, all_present, t0, span=NULL_SPAN):
+                 routing, fanout_mask, all_present, t0, span=NULL_SPAN,
+                 admission=None):
         self.key = key
+        # the admission controller whose slots this gather holds: a layout
+        # swap (apply_layout) replaces the live controller, and releasing
+        # old slots into the new one would corrupt its depth accounting
+        self.admission = admission
         self.futures = [future]
         # spans[i] belongs to futures[i]'s caller: [0] is the execution
         # owner's router.submit span, the rest are coalesced joiners (each
@@ -136,9 +151,19 @@ class ClusterService:
         max_queue_per_shard: int = 256,
         op_timeout: float | None = DEFAULT_QUERY_TIMEOUT,
         generations: list[int] | None = None,
+        layout_epoch: int = 0,
     ):
-        self.routing = routing
+        # _routing_seq is bumped by every routing-table swap (rolling
+        # republish or layout transaction) and is part of the coalescing
+        # key: keyword ids resolved on different tables never coalesce
+        self._routing_seq = 0
+        self._routing = routing
         self.pool = pool
+        # layout epoch: seeded from the manifest, bumped by apply_layout —
+        # the edge cache's repartition-coherence signal (generations cover
+        # content changes, the epoch covers boundary changes)
+        self.layout_epoch = int(layout_epoch)
+        self._converging = False
         # per-shard serving generation: seeded from the manifest (from_dir)
         # or zeros, bumped by reload_shard — the cache-coherence signal the
         # gateway's edge cache keys invalidation on
@@ -179,6 +204,9 @@ class ClusterService:
                 "root_results": 0,
                 "coalesced": 0,
                 "reloads": 0,
+                "repartitions": 0,
+                "moves": 0,
+                "health_probe_errors": 0,
             }
         )
         # load_report() qps windows: shard -> (monotonic, queries counter)
@@ -186,6 +214,17 @@ class ClusterService:
         # rather than a lifetime average
         self._load_prev: dict[int, tuple[float, int]] = {}
         self._t_created = time.monotonic()
+
+    @property
+    def routing(self) -> RoutingTable:
+        return self._routing
+
+    @routing.setter
+    def routing(self, table: RoutingTable) -> None:
+        # single assignment under the GIL; the seq bump invalidates the
+        # coalescing keys of everything resolved on the old table
+        self._routing = table
+        self._routing_seq += 1
 
     # ------------------------------------------------------------------ #
     # Construction
@@ -265,6 +304,7 @@ class ClusterService:
             generations=[
                 int(s.get("generation", 0)) for s in manifest["shards"]
             ],
+            layout_epoch=int(manifest.get("layout_epoch", 0)),
         )
 
     @classmethod
@@ -412,65 +452,86 @@ class ClusterService:
         fut: Future = Future()
         t0 = time.perf_counter()
         span = TRACER.start(trace, "router.submit", semantics=semantics)
-        # one routing snapshot per query: rolling_publish may swap
-        # self.routing mid-flight, and ids resolved on one table must never
-        # be interpreted against another
-        routing = self.routing
-        kw_ids = routing.kw_ids(keywords)
-        key = (tuple(kw_ids), semantics)
-        with self._lock:
-            if self._closed:
-                raise RuntimeError("submit() on a closed ClusterService")
-            self._stats.data["queries"] += 1
-            running = self._inflight.get(key)
-            if running is not None:  # join the in-flight execution
-                running.futures.append(fut)
-                running.t0s.append(t0)
-                span.annotate(coalesced=True)
-                if running.spans[0].trace_id is not None:
-                    span.annotate(host_trace=running.spans[0].trace_id)
-                running.spans.append(span)
-                self._stats.data["coalesced"] += 1
+        # One routing snapshot per query: a rolling republish or a layout
+        # transaction may swap self.routing mid-flight, and ids resolved on
+        # one table must never be interpreted against another.  The resolve
+        # runs outside the lock; if a swap landed in between (the seq check
+        # below), it retries on the new table.  Routing table, admission
+        # controller, and workers are pinned from the *same* layout inside
+        # one locked section — that consistency is what makes a live
+        # repartition invisible to concurrent queries.
+        state = None
+        while True:
+            routing = self.routing
+            seq = self._routing_seq
+            kw_ids = routing.kw_ids(keywords)
+            # seq is part of the coalescing key: queries resolved on
+            # different routing tables (same words, possibly different ids)
+            # never share an execution
+            key = (seq, tuple(kw_ids), semantics)
+            unknown = not kw_ids or any(k < 0 for k in kw_ids)
+            with self._lock:
+                if self._closed:
+                    raise RuntimeError("submit() on a closed ClusterService")
+                if seq != self._routing_seq:
+                    continue  # a routing/layout swap landed mid-resolve
+                self._stats.data["queries"] += 1
+                running = self._inflight.get(key)
+                if running is not None:  # join the in-flight execution
+                    running.futures.append(fut)
+                    running.t0s.append(t0)
+                    span.annotate(coalesced=True)
+                    if running.spans[0].trace_id is not None:
+                        span.annotate(host_trace=running.spans[0].trace_id)
+                    running.spans.append(span)
+                    self._stats.data["coalesced"] += 1
+                    return fut
+                if unknown:
+                    break  # delivered outside the lock
+                fanout_mask = routing.fanout(kw_ids)
+                n = len(self.pool.workers)
+                shards = [s for s in range(n) if fanout_mask >> s & 1]
+                all_present = all(
+                    routing.doc_presence(k) != 0 or routing.at_root(k)
+                    for k in kw_ids
+                )
+                if not shards:
+                    if all_present:
+                        self._stats.data["root_results"] += 1
+                    break  # root-only: delivered outside the lock
+                admission = self.admission
+                try:
+                    # raises Overloaded on a full shard; all-or-nothing
+                    admission.acquire(shards)
+                except Overloaded:
+                    span.end(error="Overloaded")
+                    raise
+                # pin the workers this execution runs on; reloads and layout
+                # swaps replace the pool but never the gather
+                workers = {s: self.pool.workers[s] for s in shards}
+                state = _Gather(key, fut, kw_ids, semantics, shards, workers,
+                                routing, fanout_mask, all_present, t0, span,
+                                admission=admission)
+                self._inflight[key] = state
+                self._active += 1
+                for w in workers.values():
+                    self._refs[w] = self._refs.get(w, 0) + 1
+                self._stats.data["fanout_submits"] += len(shards)
+                break
+        if state is None:
+            if unknown:
+                # unknown keyword: no document (and not the root) can match
+                span.end(outcome="unknown_keyword", results=0)
+                self._finish([fut], _EMPTY, [t0])
                 return fut
-        if not kw_ids or any(k < 0 for k in kw_ids):
-            # unknown keyword: no document (and not the root) can match
-            span.end(outcome="unknown_keyword", results=0)
-            self._finish([fut], _EMPTY, [t0])
-            return fut
-        fanout_mask = routing.fanout(kw_ids)
-        shards = [s for s in range(self.num_shards) if fanout_mask >> s & 1]
-        all_present = all(
-            routing.doc_presence(k) != 0 or routing.at_root(k)
-            for k in kw_ids
-        )
-        if not shards:
             # no shard holds every keyword => no full document anywhere =>
             # the corpus root is the only candidate (both semantics; see
             # module docstring)
             res = np.zeros(1, dtype=np.int64) if all_present else _EMPTY
-            if res.size:
-                with self._lock:
-                    self._stats.data["root_results"] += 1
             span.end(outcome="root_only", results=int(res.size))
             self._finish([fut], res, [t0])
             return fut
-        try:
-            self.admission.acquire(shards)  # raises Overloaded on a full shard
-        except Overloaded:
-            span.end(error="Overloaded")
-            raise
         span.annotate(fanout=len(shards))
-        with self._lock:
-            # pin the workers this execution runs on; reloads swap the pool
-            # but never the gather
-            workers = {s: self.pool.workers[s] for s in shards}
-            state = _Gather(key, fut, kw_ids, semantics, shards, workers,
-                            routing, fanout_mask, all_present, t0, span)
-            self._inflight[key] = state
-            self._active += 1
-            for w in workers.values():
-                self._refs[w] = self._refs.get(w, 0) + 1
-            self._stats.data["fanout_submits"] += len(shards)
         for s in shards:
             ssp = TRACER.start(span.ctx, "shard.gather", shard=s)
             state.shard_spans[s] = ssp
@@ -582,7 +643,10 @@ class ClusterService:
                 self._finalize(state)
 
     def _finalize(self, state: _Gather) -> None:
-        self.admission.release(state.shards)
+        # release into the controller the slots were taken from: a layout
+        # transaction may have swapped self.admission since this gather
+        # was admitted
+        (state.admission or self.admission).release(state.shards)
         # un-publish BEFORE delivering: submits holding the service lock
         # either joined (their future is in state.futures now) or will start
         # a fresh execution after this pop
@@ -729,6 +793,121 @@ class ClusterService:
             threading.Thread(target=closing.close, daemon=True).start()
 
     # ------------------------------------------------------------------ #
+    # Layout transactions (repartition / shard move)
+    # ------------------------------------------------------------------ #
+    def apply_layout(self, path: str, manifest: dict | None = None) -> None:
+        """Converge this live service onto the layout committed at ``path``.
+
+        The generalization of :meth:`reload_shard` from one shard to the
+        whole cluster: a *layout transaction*.  A full worker set for the
+        new layout (possibly a different shard count at different
+        boundaries) is built first, while the old layout keeps serving;
+        then, in one locked swap, the service replaces its worker pool,
+        routing table, generations vector, admission controller (resized to
+        the new shard count, cumulative counters carried over), and
+        ``layout_epoch``.  Queries submitted before the swap finish on the
+        workers, routing snapshot, and admission slots they were pinned to
+        at submit time — old workers are retired and closed only after
+        their last gather, so a live repartition drops nothing.
+        """
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("apply_layout() on a closed ClusterService")
+            self._converging = True
+        try:
+            loaded, routing, entries = load_cluster_layout(path)
+            manifest = loaded if manifest is None else manifest
+            # the expensive half runs outside the lock: spawn/load the new
+            # worker set while the old layout keeps serving traffic
+            new_pool = self.pool.rebuild(entries, manifest)
+            to_close: list[Worker] = []
+            with self._lock:
+                if self._closed:  # raced close(): discard the fresh pool
+                    discarded = new_pool
+                else:
+                    discarded = None
+                    old_workers = self.pool.detach()
+                    self.pool = new_pool
+                    self.routing = routing  # property setter bumps the seq
+                    self.generations = [
+                        int(s.get("generation", 0))
+                        for s in manifest["shards"]
+                    ]
+                    self.layout_epoch = int(
+                        manifest.get("layout_epoch", self.layout_epoch + 1)
+                    )
+                    self.admission = self.admission.resized(len(entries))
+                    self._load_prev.clear()  # qps windows are per-layout
+                    self._stats.data["repartitions"] += 1
+                    for w in old_workers:
+                        if self._refs.get(w, 0) > 0:
+                            self._retired.add(w)  # closed by its last gather
+                        else:
+                            to_close.append(w)
+            if discarded is not None:
+                discarded.close(5.0)
+                raise RuntimeError("apply_layout() on a closed ClusterService")
+            for w in to_close:
+                threading.Thread(target=w.close, daemon=True).start()
+        finally:
+            with self._lock:
+                self._converging = False
+
+    def move_shard(self, i: int, endpoint: str | list[str] | None) -> None:
+        """Converge shard ``i`` onto a new endpoint (the live half of a
+        shard move — :func:`repro.cluster.rebalance.move_shard` launches
+        the server and flips the manifest).
+
+        Dials the new endpoint, installs the connection, and retires the
+        source worker: in-flight queries drain on the old worker (closed
+        after its last gather), everything after runs against the new host.
+        Requires the remote transport — only a :class:`RemotePool` can
+        re-point a shard at another host.
+        """
+        if not 0 <= i < self.num_shards:
+            raise IndexError(f"shard {i} out of range")
+        redirect = getattr(self.pool, "redirect", None)
+        if redirect is None:
+            raise ValueError(
+                "moving a shard between hosts needs the remote transport "
+                f"(this service runs {self.pool.transport!r} workers)"
+            )
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("move_shard() on a closed ClusterService")
+        new = redirect(i, endpoint)
+        with self._lock:
+            if self._closed:  # raced close(): discard the fresh worker
+                closing, old = new, None
+            else:
+                old = self.pool.install(i, new)
+                self._stats.data["moves"] += 1
+                if self._refs.get(old, 0) > 0:
+                    self._retired.add(old)  # closed by its last gather
+                    closing = None
+                else:
+                    closing = old
+        if closing is not None:
+            threading.Thread(target=closing.close, daemon=True).start()
+
+    def layout(self) -> dict:
+        """The serving layout as declarative facts (planner/debug input)."""
+        with self._lock:
+            workers = list(self.pool.workers)
+            epoch = self.layout_epoch
+            converging = self._converging
+        specs = [w.spec for w in workers]
+        bounds = [s.doc_lo for s in specs] + (
+            [specs[-1].doc_hi] if specs else []
+        )
+        return {
+            "layout_epoch": epoch,
+            "converging": converging,
+            "num_shards": len(specs),
+            "doc_bounds": bounds,
+        }
+
+    # ------------------------------------------------------------------ #
     # Stats / lifecycle
     # ------------------------------------------------------------------ #
     def shard_health(self) -> list[dict]:
@@ -749,8 +928,21 @@ class ClusterService:
                 else:
                     configured = 1
                     live = 0 if getattr(w, "_dead", None) is not None else 1
+            except (WorkerDied, ProtocolError, TimeoutError, OSError):
+                configured, live = 1, 0  # typed: the worker is unanswerable
             except Exception:
-                configured, live = 1, 0  # an unanswerable worker is down
+                # an unexpected probe failure is a bug in the probe, not
+                # evidence of a dead shard: log + count it instead of
+                # silently flipping the shard to "down" (which would 503
+                # the gateway's readiness for no real reason)
+                log.warning(
+                    "shard %d health probe failed unexpectedly",
+                    i,
+                    exc_info=True,
+                )
+                with self._lock:
+                    self._stats.data["health_probe_errors"] += 1
+                configured, live = 1, 1
             rows.append(
                 {
                     "shard": i,
@@ -774,6 +966,8 @@ class ClusterService:
         snap.data["worker_locality"] = self.pool.locality
         snap.data["worker_respawns"] = getattr(self.pool, "respawns", 0)
         snap.data["generations"] = list(self.generation_vector())
+        snap.data["layout_epoch"] = self.layout_epoch
+        snap.data["num_shards"] = len(workers)
         snap.data.update(self.admission.snapshot())
         # QueryStats.merge sums the shard counters and recomputes the plan
         # hit rate from the merged hits/launches.  Collection fans out so a
@@ -885,6 +1079,7 @@ class ClusterService:
             "kind": "xks-load-report",
             "ts_ms": round(time.time() * 1e3, 3),
             "num_shards": len(shards),
+            "layout": self.layout(),
             "hottest_shard": hottest,
             # max/mean qps: 1.0 = perfectly balanced, grows with skew
             "skew": round(max(qps) / mean_qps, 3) if mean_qps > 0 else 1.0,

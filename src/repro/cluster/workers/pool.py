@@ -63,6 +63,35 @@ class WorkerPool:
             self.workers[i] = worker
         return old
 
+    def rebuild(
+        self, entries: list[tuple[ShardSpec, str]], manifest: dict
+    ) -> WorkerPool:
+        """A *new* pool of the same transport + settings over a new layout.
+
+        The repartition primitive: ``entries`` are the (spec, artifact dir)
+        pairs of the freshly published layout — possibly a different shard
+        count at different boundaries.  The current pool keeps serving
+        untouched; the caller swaps pools atomically and then retires this
+        one via :meth:`detach`.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot rebuild for a new layout"
+        )
+
+    def detach(self) -> list[Worker]:
+        """Stop supervising and hand over the live workers *without* closing.
+
+        Marks the pool closed so crash callbacks stop respawning (a respawn
+        of an old-layout worker after the swap would leak a process), empties
+        ``workers`` so a late ``close()`` is a no-op, and returns the workers
+        for the caller (the router's layout transaction) to retire — each
+        one is closed only after its last in-flight gather completes.
+        """
+        with self._lock:
+            self._closed = True
+            workers, self.workers = list(self.workers), []
+        return workers
+
     def close(self, timeout: float = 30.0) -> None:
         with self._lock:
             self._closed = True
@@ -108,6 +137,20 @@ class ThreadPool(WorkerPool):
             old.spec,
             engine,
             backend=self._backends[i],
+            max_batch=self._max_batch,
+            batch_window_ms=self._batch_window_ms,
+        )
+
+    def rebuild(
+        self, entries: list[tuple[ShardSpec, str]], manifest: dict
+    ) -> ThreadPool:
+        shards = [
+            (spec, KeywordSearchEngine.load(d, mmap=True))
+            for spec, d in entries
+        ]
+        return ThreadPool(
+            shards,
+            backends=_rebuild_backends(self._backends, len(entries)),
             max_batch=self._max_batch,
             batch_window_ms=self._batch_window_ms,
         )
@@ -282,6 +325,21 @@ class ProcessPool(SupervisedPool):
         )
         return self._ready_or_raise(worker, self._spawn_timeout)
 
+    def rebuild(
+        self, entries: list[tuple[ShardSpec, str]], manifest: dict
+    ) -> ProcessPool:
+        return ProcessPool(
+            entries,
+            backends=_rebuild_backends(self._backends, len(entries)),
+            max_batch=self._max_batch,
+            batch_window_ms=self._batch_window_ms,
+            max_respawns=self._max_respawns,
+            spawn_timeout=self._spawn_timeout,
+            op_timeout=self._op_timeout,
+            replicas=self._replicas,
+            hedge_ms=self._hedge_ms,
+        )
+
     def _on_death(self, worker: ProcessWorker) -> None:
         """Reader-thread callback on unexpected death: bounded respawn.
 
@@ -428,6 +486,44 @@ class RemotePool(SupervisedPool):
                 ) from e
         return worker
 
+    def rebuild(
+        self, entries: list[tuple[ShardSpec, str]], manifest: dict
+    ) -> RemotePool:
+        # endpoints for the new layout come from the committed manifest: a
+        # repartitioned shard with no placement yet (endpoint null) runs
+        # locally over its fresh artifact dir, exactly like from_dir
+        from ..manifest import manifest_endpoints
+
+        return RemotePool(
+            entries,
+            endpoints=manifest_endpoints(manifest),
+            backends=_rebuild_backends(self._backends, len(entries)),
+            max_batch=self._max_batch,
+            batch_window_ms=self._batch_window_ms,
+            max_respawns=self._max_respawns,
+            spawn_timeout=self._spawn_timeout,
+            connect_timeout=self._connect_timeout,
+            op_timeout=self._op_timeout,
+            reconnect_backoff=self._backoff,
+            hedge_ms=self._hedge_ms,
+        )
+
+    def redirect(self, i: int, endpoint: str | list[str] | None) -> Worker:
+        """Re-point shard ``i`` at a new endpoint and dial it (shard move).
+
+        Updates the pool's endpoint config so crash reconnects go to the new
+        host, then returns a ready worker for the caller to ``install`` —
+        the old worker keeps serving its in-flight queries until the router
+        retires it, the standard hot-swap contract.
+        """
+        if not 0 <= i < len(self._specs):
+            raise IndexError(f"shard {i} out of range")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("redirect() on a closed pool")
+            self._endpoints[i] = _norm_endpoints(endpoint)
+        return self._ready_or_raise(self._build(i), self._spawn_timeout)
+
     def _on_death(self, worker) -> None:
         """Reader-thread callback: respawn locally, reconnect remotely."""
         i = worker.spec.index
@@ -471,3 +567,20 @@ def _per_shard(backends: str | list[str], n: int) -> list[str]:
     if len(backends) != n:
         raise ValueError(f"{n} shards but {len(backends)} backends")
     return list(backends)
+
+
+def _rebuild_backends(backends: list[str], n: int) -> list[str]:
+    """Backend list for a rebuilt pool over ``n`` shards.
+
+    A homogeneous pool carries its backend to any shard count; a
+    heterogeneous per-shard assignment has no meaningful mapping onto new
+    boundaries, so repartitioning such a pool is refused out loud.
+    """
+    uniq = set(backends)
+    if len(uniq) > 1:
+        raise ValueError(
+            "cannot rebuild a pool with heterogeneous per-shard backends "
+            f"({backends}) for a new layout — the old assignment has no "
+            "mapping onto the new shard boundaries"
+        )
+    return [backends[0] if backends else "jax"] * n

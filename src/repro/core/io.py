@@ -43,11 +43,30 @@ _MANIFEST = "manifest.json"
 # carries an ``endpoint`` ("host:port" of a standalone shard server, or
 # null to serve the shard locally).  v4 (PR 6): every entry carries
 # ``replicas``, a list of extra read-replica endpoints the RemotePool
-# hedges across — readers of older manifests would silently miss the
-# fields, so the version gates them out loud; see :func:`migrate_cluster`
-# for the in-place upgrade path.
-CLUSTER_FORMAT_VERSION = 4
+# hedges across.  v5 (rebalancer): the manifest carries a top-level
+# ``layout_epoch``, bumped by every repartition (``repartition_publish``) —
+# the cache-coherence signal that distinguishes "same shard count, new
+# boundaries" from "same layout, new content" (which generations cover).
+# Readers of older manifests would silently miss the fields, so the
+# version gates them out loud; see :func:`migrate_cluster` for the
+# in-place upgrade path.
+CLUSTER_FORMAT_VERSION = 5
 _CLUSTER_MANIFEST = "cluster.json"
+
+
+def fsync_dir(dir_path: str) -> None:
+    """Flush ``dir_path``'s directory entries to disk.
+
+    Creating or renaming a file makes its *data* durable only after the
+    containing directory's entry is fsynced too — every publish path calls
+    this on the artifact directory after writing fresh files and before
+    committing the manifest that names them.
+    """
+    dirfd = os.open(dir_path, os.O_RDONLY)
+    try:
+        os.fsync(dirfd)
+    finally:
+        os.close(dirfd)
 
 
 def commit_json(dir_path: str, name: str, obj: dict) -> None:
@@ -64,11 +83,7 @@ def commit_json(dir_path: str, name: str, obj: dict) -> None:
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, os.path.join(dir_path, name))
-    dirfd = os.open(dir_path, os.O_RDONLY)
-    try:
-        os.fsync(dirfd)
-    finally:
-        os.close(dirfd)
+    fsync_dir(dir_path)
 
 
 class _CSRLists:
@@ -381,6 +396,9 @@ _CLUSTER_MIGRATIONS = {
     2: lambda m: [s.setdefault("endpoint", None) for s in m["shards"]],
     # v3 -> v4: per-shard read-replica endpoint lists (hedged dispatch, PR 6)
     3: lambda m: [s.setdefault("replicas", []) for s in m["shards"]],
+    # v4 -> v5: top-level layout_epoch (online rebalancer) — pre-v5 clusters
+    # never repartitioned, so their layout is by definition epoch 0
+    4: lambda m: m.setdefault("layout_epoch", 0),
 }
 
 

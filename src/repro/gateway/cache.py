@@ -9,6 +9,12 @@ submit) — if a reload lands mid-flight the stamp is older than what
 actually served the query, so the entry dies on its first lookup after
 the bump: over-invalidation, never staleness.
 
+Generations cover *content* changes; the cluster's ``layout_epoch``
+covers *boundary* changes.  A repartition resets every generation to 0,
+so a same-shard-count repartition could alias a stale stamp — entries
+are therefore additionally stamped with the epoch they were computed
+under, and any epoch drift invalidates on lookup.
+
 Keys are :attr:`repro.api.Query.cache_key` (normalized keywords +
 semantics + index — backend excluded, all backends must agree on ids).
 LRU-bounded; plain dict+lock, no daemon.
@@ -27,28 +33,33 @@ class EdgeCache:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self.max_entries = int(max_entries)
         self._lock = threading.Lock()
-        # key -> (value, touched shard indices, generation vector at stamp)
+        # key -> (value, touched shards, generation vector, layout epoch)
         self._entries: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
         self.evictions = 0
 
-    def get(self, key, generations: tuple[int, ...]):
+    def get(self, key, generations: tuple[int, ...], epoch: int = 0):
         """The cached value, or None (miss / entry went stale).
 
-        ``generations`` is the cluster's *current* vector; an entry whose
-        touched shards drifted from their stamped generations (or whose
-        vector length changed — a repartition) is dropped on the spot.
+        ``generations`` is the cluster's *current* vector and ``epoch``
+        its current ``layout_epoch``; an entry whose touched shards
+        drifted from their stamped generations, whose vector length
+        changed, or whose layout epoch moved (a repartition — shard
+        indices mean different document ranges now) is dropped on the
+        spot.
         """
         with self._lock:
             ent = self._entries.get(key)
             if ent is None:
                 self.misses += 1
                 return None
-            value, touched, stamped = ent
-            stale = len(generations) != len(stamped) or any(
-                generations[s] != stamped[s] for s in touched
+            value, touched, stamped, stamped_epoch = ent
+            stale = (
+                int(epoch) != stamped_epoch
+                or len(generations) != len(stamped)
+                or any(generations[s] != stamped[s] for s in touched)
             )
             if stale:
                 del self._entries[key]
@@ -59,13 +70,17 @@ class EdgeCache:
             self.hits += 1
             return value
 
-    def put(self, key, value, touched, generations: tuple[int, ...]) -> None:
-        """Stamp and store; ``generations`` must predate the execution."""
+    def put(
+        self, key, value, touched, generations: tuple[int, ...], epoch: int = 0
+    ) -> None:
+        """Stamp and store; ``generations``/``epoch`` must predate the
+        execution (captured before submit, so a swap landing mid-flight
+        invalidates rather than aliases)."""
         touched = tuple(int(s) for s in touched)
         if any(s >= len(generations) for s in touched):
             return  # stamp cannot cover the touched set: don't cache
         with self._lock:
-            self._entries[key] = (value, touched, tuple(generations))
+            self._entries[key] = (value, touched, tuple(generations), int(epoch))
             self._entries.move_to_end(key)
             while len(self._entries) > self.max_entries:
                 self._entries.popitem(last=False)

@@ -430,6 +430,18 @@ class Gateway:
         report = await asyncio.get_running_loop().run_in_executor(
             None, lr, top
         )
+        # what the rebalance planner would do about the observed skew —
+        # advisory only; applying it is repartition_publish's job
+        try:
+            from repro.cluster.rebalance import plan_rebalance
+
+            new_plan, actions = plan_rebalance(report)
+            report["proposal"] = {
+                "actions": [a.to_json() for a in actions],
+                "plan": new_plan.to_json() if new_plan is not None else None,
+            }
+        except Exception as e:  # a debug read never 500s the gateway
+            report["proposal_error"] = str(e)
         return 200, report
 
     def _healthz(self):
@@ -437,6 +449,7 @@ class Gateway:
             "ok": True,
             "shards": self.service.num_shards,
             "generations": list(self.service.generation_vector()),
+            "layout_epoch": int(getattr(self.service, "layout_epoch", 0)),
         }
         health = getattr(self.service, "shard_health", None)
         if callable(health):
@@ -476,12 +489,13 @@ class Gateway:
         )
         if span.ctx is not None:
             q = q.with_trace(span.ctx.traceparent)
-        # generation stamp BEFORE submit: a reload landing mid-flight makes
-        # the stamp conservative (entry invalidates early, never serves
-        # stale) — see cache.py
+        # generation + epoch stamp BEFORE submit: a reload or repartition
+        # landing mid-flight makes the stamp conservative (entry
+        # invalidates early, never serves stale) — see cache.py
         gens = self.service.generation_vector()
+        epoch = int(getattr(self.service, "layout_epoch", 0))
         csp = TRACER.start(span.ctx, "gateway.cache")
-        hit = self.cache.get(q.cache_key, gens)
+        hit = self.cache.get(q.cache_key, gens, epoch)
         csp.end(hit=hit is not None)
         if hit is not None:
             out = dict(hit, cached=True)
@@ -509,7 +523,7 @@ class Gateway:
                 504, f"query exceeded {self.request_timeout}s"
             ) from e
         payload = res.to_dict()
-        self.cache.put(q.cache_key, payload, touched, gens)
+        self.cache.put(q.cache_key, payload, touched, gens, epoch)
         out = dict(payload, cached=False)
         self._finish_request(span, out, t0, q, cached=False)
         return 200, out

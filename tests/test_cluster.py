@@ -744,6 +744,7 @@ def test_migrate_cluster_upgrades_old_manifest(tmp_path, corpus, expected):
         del s["generation"]
         del s["endpoint"]
         del s["replicas"]
+    del manifest["layout_epoch"]
     manifest["cluster_format_version"] = 1
     with open(mpath, "w") as f:
         json.dump(manifest, f)
@@ -754,8 +755,38 @@ def test_migrate_cluster_upgrades_old_manifest(tmp_path, corpus, expected):
     assert [s["generation"] for s in m["shards"]] == [0, 0]
     assert [s["endpoint"] for s in m["shards"]] == [None, None]
     assert [s["replicas"] for s in m["shards"]] == [[], []]
+    assert m["layout_epoch"] == 0
     assert migrate_cluster(path) == m  # already current: no-op
     with ClusterService.from_dir(path, batch_window_ms=1.0) as svc:
+        np.testing.assert_array_equal(
+            svc.query(ALL_QUERIES[0], "slca"), expected[(0, "slca")]
+        )
+
+
+def test_migrate_cluster_v4_to_v5(tmp_path, corpus, expected):
+    """A v4 manifest (replicas, no layout_epoch) migrates to epoch 0 and
+    round-trips through the loader; everything else is untouched."""
+    from repro.cluster import migrate_cluster
+
+    path = str(tmp_path / "cluster")
+    built = build_cluster(corpus, 2, path)
+    mpath = os.path.join(path, "cluster.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["layout_epoch"]  # regress to v4
+    manifest["cluster_format_version"] = 4
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+    with pytest.raises(ValueError, match=r"repro\.core\.io\.migrate_cluster"):
+        ClusterService.from_dir(path)
+    m = migrate_cluster(path)
+    assert m["layout_epoch"] == 0  # pre-v5 clusters never repartitioned
+    assert [s["dir"] for s in m["shards"]] == [
+        s["dir"] for s in built["shards"]
+    ]
+    with ClusterService.from_dir(path, batch_window_ms=1.0) as svc:
+        assert svc.layout_epoch == 0
         np.testing.assert_array_equal(
             svc.query(ALL_QUERIES[0], "slca"), expected[(0, "slca")]
         )

@@ -131,6 +131,12 @@ def test_edge_cache_unit():
     # repartition (vector length change) kills too
     c.put("b", 2, (0,), (0,))
     assert c.get("b", (0, 0)) is None
+    # layout epoch drift kills even when the generation vector matches:
+    # a same-shard-count repartition resets generations to 0, so the
+    # epoch is the only signal that shard indices changed meaning
+    c.put("e", 5, (0,), (0, 0), epoch=1)
+    assert c.get("e", (0, 0), epoch=1) == 5
+    assert c.get("e", (0, 0), epoch=2) is None
     # LRU bound
     c.put("x", 1, (), (0,))
     c.put("y", 2, (), (0,))

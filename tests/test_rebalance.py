@@ -1,0 +1,420 @@
+"""Elastic rebalancer: plans, the planner, and live repartitions.
+
+The acceptance property is the hard one: a live ClusterService must
+split 2 -> 4 and merge 4 -> 2 **under a steady query stream** with zero
+client-visible errors and byte-identical results before, during, and
+after — the frozen-partition assumption is gone from every layer.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterService,
+    PlacementPlan,
+    apply_actions,
+    build_cluster,
+    doc_heat_weights,
+    plan_rebalance,
+    repartition_publish,
+    specs_from_bounds,
+)
+from repro.cluster.rebalance import Action
+from repro.core import KeywordSearchEngine
+from repro.data import QUERIES, generate_discogs_tree
+
+N_RELEASES = 30
+
+EXTRA_QUERIES = [
+    ["releases"],  # corpus-root-only keyword
+    ["release"],  # present in every document root
+    ["img-3.jpg", "vinyl"],  # unique leaf: routes to exactly one shard
+    ["zzz-not-a-word"],
+    ["vinyl"],
+]
+ALL_QUERIES = [kws for _, kws in QUERIES.values()] + EXTRA_QUERIES
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_discogs_tree(n_releases=N_RELEASES, seed=5)
+
+
+@pytest.fixture(scope="module")
+def mono(corpus):
+    return KeywordSearchEngine(corpus)
+
+
+@pytest.fixture(scope="module")
+def expected(mono):
+    return {
+        (i, sem): mono.query(q, semantics=sem, backend="scalar")
+        for i, q in enumerate(ALL_QUERIES)
+        for sem in ("slca", "elca")
+    }
+
+
+# --------------------------------------------------------------------------- #
+# PlacementPlan
+# --------------------------------------------------------------------------- #
+
+
+def test_plan_validation():
+    PlacementPlan((0, 5, 10)).validate()
+    PlacementPlan((0, 5, 10)).validate(n_docs=10)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        PlacementPlan((0, 5, 5)).validate()
+    with pytest.raises(ValueError, match="strictly increasing"):
+        PlacementPlan((1, 5, 10)).validate()
+    with pytest.raises(ValueError, match="corpus has"):
+        PlacementPlan((0, 5, 10)).validate(n_docs=12)
+    with pytest.raises(ValueError, match="endpoint"):
+        PlacementPlan((0, 5, 10), endpoints=("h:1",)).validate()
+    with pytest.raises(ValueError, match="MAX_SHARDS"):
+        PlacementPlan(tuple(range(0, 66))).validate()
+    with pytest.raises(ValueError, match=">= 1 shard"):
+        PlacementPlan((0,)).validate()
+
+
+def test_plan_json_round_trip():
+    plan = PlacementPlan(
+        (0, 3, 9, 30), endpoints=("h1:1", None, ("h2:2", "h3:3"))
+    )
+    assert PlacementPlan.from_json(plan.to_json()) == plan
+    assert json.loads(json.dumps(plan.to_json())) == plan.to_json()
+
+
+def test_plan_from_manifest(tmp_path, corpus):
+    path = str(tmp_path / "cluster")
+    m = build_cluster(corpus, 3, path)
+    m["shards"][1]["endpoint"] = "h:1"
+    m["shards"][2]["endpoint"] = "h:2"
+    m["shards"][2]["replicas"] = ["h:3"]
+    plan = PlacementPlan.from_manifest(m)
+    assert plan.num_shards == 3
+    assert plan.doc_bounds[0] == 0 and plan.doc_bounds[-1] == N_RELEASES
+    assert plan.endpoints == (None, "h:1", ("h:2", "h:3"))
+    specs = specs_from_bounds(corpus, list(plan.doc_bounds))
+    assert [s.to_json() | {"index": s.index} for s in specs] == [
+        {k: obj[k] for k in specs[0].to_json()} for obj in m["shards"]
+    ]
+
+
+def test_heat_balanced_plan_shifts_boundaries(corpus):
+    # all heat on the first few documents -> the hot range gets more shards
+    heat = np.zeros(N_RELEASES)
+    heat[:5] = 100.0
+    hot = PlacementPlan.heat_balanced(corpus, 4, heat, smoothing=0.1)
+    cold = PlacementPlan.balanced(corpus, 4)
+    hot.validate(n_docs=N_RELEASES)
+    assert hot.doc_bounds[1] < cold.doc_bounds[1]  # tighter first shard
+
+
+# --------------------------------------------------------------------------- #
+# Planner
+# --------------------------------------------------------------------------- #
+
+
+def _report(loads, bounds, doc_heat=None):
+    rows = []
+    for i, load in enumerate(loads):
+        rows.append(
+            {
+                "shard": i,
+                "qps": float(load),
+                "queries": int(load * 10),
+                "doc_heat": list(doc_heat[i]) if doc_heat else [],
+            }
+        )
+    return {
+        "version": 1,
+        "shards": rows,
+        "layout": {"doc_bounds": list(bounds), "num_shards": len(loads)},
+    }
+
+
+def test_planner_splits_hot_shard():
+    rep = _report([90.0, 10.0], [0, 10, 30])
+    plan, actions = plan_rebalance(rep)
+    assert [a.kind for a in actions] == ["split"]
+    assert actions[0].shard == 0 and 1 <= actions[0].cut_doc <= 9
+    assert actions[0].gain > 0 and 0 < actions[0].cost <= 1
+    assert plan.num_shards == 3 and plan.doc_bounds[-1] == 30
+
+
+def test_planner_split_follows_heat_median():
+    # all heat in the last histogram bucket -> the cut lands near doc_hi
+    heat = [0.0] * 63 + [50.0]
+    rep = _report([90.0, 10.0], [0, 10, 30], doc_heat=[heat, [0.0] * 64])
+    _, actions = plan_rebalance(rep)
+    assert actions[0].kind == "split"
+    assert actions[0].cut_doc == 9  # clamped: every shard keeps >= 1 doc
+
+
+def test_planner_merges_cold_pair():
+    rep = _report([50.0, 1.0, 1.0, 48.0], [0, 8, 16, 24, 30])
+    plan, actions = plan_rebalance(rep)
+    merges = [a for a in actions if a.kind == "merge"]
+    assert merges and merges[0].shard == 1
+    assert plan.doc_bounds[-1] == 30
+    assert 16 not in plan.doc_bounds  # the 1-2 boundary is gone
+
+
+def test_planner_noop_on_balanced_load():
+    plan, actions = plan_rebalance(_report([10.0, 11.0, 9.0], [0, 10, 20, 30]))
+    assert plan is None and actions == []
+    # and zero traffic proposes nothing (no signal to balance on)
+    plan, actions = plan_rebalance(_report([0, 0, 0], [0, 10, 20, 30]))
+    assert plan is None and actions == []
+
+
+def test_planner_moves_unsplittable_hot_shard():
+    # one document cannot split: with a spare host it moves instead
+    rep = _report([90.0, 10.0], [0, 1, 30])
+    plan, actions = plan_rebalance(rep, spare_endpoints=("spare:9999",))
+    assert [a.kind for a in actions] == ["move"]
+    assert actions[0].endpoint == "spare:9999"
+    assert plan.num_shards == 2 and plan.endpoints[0] == "spare:9999"
+    # without a spare there is nothing to do for it
+    plan, actions = plan_rebalance(rep)
+    assert actions == []
+
+
+def test_planner_respects_shard_cap():
+    rep = _report([90.0, 10.0], [0, 10, 30])
+    plan, actions = plan_rebalance(rep, max_shards=2)
+    assert actions == [] and plan is None
+
+
+def test_apply_actions_endpoint_inheritance():
+    plan = PlacementPlan((0, 10, 20, 30), endpoints=("h:1", "h:2", None))
+    out = apply_actions(plan, [Action("split", 2, cut_doc=25)])
+    # untouched ranges keep their placement; the split halves start local
+    assert out.doc_bounds == (0, 10, 20, 25, 30)
+    assert out.endpoints == ("h:1", "h:2", None, None)
+    out = apply_actions(plan, [Action("merge", 0)])
+    assert out.doc_bounds == (0, 20, 30)
+    assert out.endpoints == (None, None)  # merged range: placement unknown
+    with pytest.raises(ValueError, match="cut_doc"):
+        apply_actions(plan, [Action("split", 0)])
+    with pytest.raises(ValueError, match="unknown action"):
+        apply_actions(plan, [Action("explode", 0)])
+
+
+def test_doc_heat_weights_localizes_heat(corpus):
+    bounds = [0, 15, N_RELEASES]
+    # shard 0's heat all in its first bucket; shard 1 silent
+    heat0 = [100.0] + [0.0] * 63
+    w = doc_heat_weights(corpus, bounds, [heat0, [0.0] * 64])
+    assert w.shape == (N_RELEASES,)
+    # almost all heat lands on documents (the sliver attributed to the
+    # shard's replica root — local id 0 — belongs to no document)
+    assert 85.0 < w.sum() <= 100.0
+    assert w[0] > 0 and w[15:].sum() == 0.0  # stayed inside shard 0
+
+
+# --------------------------------------------------------------------------- #
+# repartition_publish
+# --------------------------------------------------------------------------- #
+
+
+def test_offline_repartition_round_trip(tmp_path, corpus, expected):
+    path = str(tmp_path / "cluster")
+    m0 = build_cluster(corpus, 2, path)
+    assert m0["layout_epoch"] == 0
+    old_dirs = {s["dir"] for s in m0["shards"]}
+
+    m1 = repartition_publish(path, corpus, PlacementPlan((0, 4, 11, 30)))
+    assert m1["layout_epoch"] == 1 and m1["num_shards"] == 3
+    assert [s["generation"] for s in m1["shards"]] == [0, 0, 0]
+    assert all(  # old layout's artifacts were reclaimed after the commit
+        not os.path.exists(os.path.join(path, d)) for d in old_dirs
+    )
+    with ClusterService.from_dir(path, batch_window_ms=1.0) as svc:
+        assert svc.layout_epoch == 1
+        for i, q in enumerate(ALL_QUERIES):
+            np.testing.assert_array_equal(
+                svc.query(q, "slca"), expected[(i, "slca")]
+            )
+
+    # a plan that does not cover the corpus is rejected before any writes
+    with pytest.raises(ValueError, match="corpus has"):
+        repartition_publish(path, corpus, PlacementPlan((0, 4, 29)))
+    assert json.load(open(os.path.join(path, "cluster.json")))[
+        "layout_epoch"
+    ] == 1
+
+
+def test_live_split_merge_under_traffic(tmp_path, corpus, expected):
+    """The tentpole acceptance: split 2 -> 4 and merge 4 -> 2 on a live
+    service while a steady stream of queries runs.  Zero errors, every
+    result byte-identical to the monolith, epochs advance."""
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    svc = ClusterService.from_dir(path, batch_window_ms=0.5)
+    errors: list[Exception] = []
+    mismatches: list[int] = []
+    stop = threading.Event()
+
+    def hammer():
+        i = 0
+        while not stop.is_set():
+            qi = i % len(ALL_QUERIES)
+            sem = ("slca", "elca")[i % 2]
+            try:
+                got = svc.submit(ALL_QUERIES[qi], semantics=sem).result(30)
+                if not np.array_equal(got, expected[(qi, sem)]):
+                    mismatches.append(qi)
+            except Exception as e:  # recorded and asserted == [] below
+                errors.append(e)
+            i += 1
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        m1 = repartition_publish(
+            path, corpus, PlacementPlan((0, 7, 15, 22, 30)), service=svc
+        )
+        assert svc.layout_epoch == m1["layout_epoch"] == 1
+        assert svc.num_shards == 4
+        m2 = repartition_publish(
+            path, corpus, PlacementPlan.balanced(corpus, 2), service=svc
+        )
+        assert svc.layout_epoch == m2["layout_epoch"] == 2
+        assert svc.num_shards == 2
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(30)
+    assert errors == []
+    assert mismatches == []
+    stats = svc.stats().data
+    assert stats["repartitions"] == 2
+    assert stats["queries"] > 0
+    # post-swap sanity: every query still byte-identical on the new layout
+    for i, q in enumerate(ALL_QUERIES):
+        np.testing.assert_array_equal(
+            svc.query(q, "elca"), expected[(i, "elca")]
+        )
+    svc.close()
+
+
+def test_repartition_process_transport(tmp_path, corpus, expected):
+    """The layout transaction rebuilds subprocess workers too."""
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    with ClusterService.from_dir(
+        path, transport="process", batch_window_ms=1.0
+    ) as svc:
+        np.testing.assert_array_equal(
+            svc.query(ALL_QUERIES[0], "slca"), expected[(0, "slca")]
+        )
+        m = repartition_publish(
+            path, corpus, PlacementPlan((0, 10, 20, 30)), service=svc
+        )
+        assert m["num_shards"] == 3 and svc.num_shards == 3
+        assert svc.pool.locality == ["process"] * 3
+        for i in (0, 2, len(ALL_QUERIES) - 1):
+            np.testing.assert_array_equal(
+                svc.query(ALL_QUERIES[i], "slca"), expected[(i, "slca")]
+            )
+
+
+def test_planner_to_publish_pipeline(tmp_path, corpus, expected):
+    """load_report -> plan_rebalance -> repartition_publish, end to end."""
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    with ClusterService.from_dir(path, batch_window_ms=0.5) as svc:
+        for _ in range(8):  # heat up shard 0's range
+            svc.query(ALL_QUERIES[0], "slca")
+        report = svc.load_report()
+        assert report["layout"]["doc_bounds"][0] == 0
+        report["shards"][0]["qps"] = 50.0  # deterministic skew
+        report["shards"][1]["qps"] = 1.0
+        plan, actions = plan_rebalance(report)
+        assert plan is not None and actions[0].kind == "split"
+        m = repartition_publish(path, corpus, plan, service=svc)
+        assert m["num_shards"] == 3
+        np.testing.assert_array_equal(
+            svc.query(ALL_QUERIES[0], "slca"), expected[(0, "slca")]
+        )
+
+
+# --------------------------------------------------------------------------- #
+# move_shard (remote transport)
+# --------------------------------------------------------------------------- #
+
+
+def test_move_shard_live(tmp_path, corpus, expected):
+    from repro.cluster.rebalance import move_shard
+
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    with ClusterService.from_dir(
+        path, transport="remote", batch_window_ms=1.0
+    ) as svc:
+        assert svc.pool.locality == ["process", "process"]
+        np.testing.assert_array_equal(
+            svc.query(ALL_QUERIES[0], "slca"), expected[(0, "slca")]
+        )
+        proc, endpoint, m = move_shard(path, 0, service=svc)
+        try:
+            assert m["shards"][0]["endpoint"] == endpoint
+            assert svc.pool.locality == ["remote", "process"]
+            assert svc.stats().data["moves"] == 1
+            # content unchanged: no generation bump, results identical
+            assert [s["generation"] for s in m["shards"]] == [0, 0]
+            for i in (0, len(ALL_QUERIES) - 1):
+                np.testing.assert_array_equal(
+                    svc.query(ALL_QUERIES[i], "slca"), expected[(i, "slca")]
+                )
+        finally:
+            proc.kill()
+            proc.wait(10)
+
+
+def test_move_shard_needs_remote_transport(tmp_path, corpus):
+    path = str(tmp_path / "cluster")
+    build_cluster(corpus, 2, path)
+    with ClusterService.from_dir(path, batch_window_ms=1.0) as svc:
+        with pytest.raises(ValueError, match="remote transport"):
+            svc.move_shard(0, "127.0.0.1:1")
+        with pytest.raises(IndexError):
+            svc.move_shard(9, "127.0.0.1:1")
+
+
+# --------------------------------------------------------------------------- #
+# shard_health error typing (satellite)
+# --------------------------------------------------------------------------- #
+
+
+def test_shard_health_typed_vs_unexpected_errors(corpus):
+    svc = ClusterService.from_tree(corpus, 2, batch_window_ms=1.0)
+    try:
+        class TypedBoom:
+            transport = "stub"
+
+            def health(self):
+                raise TimeoutError("probe timed out")
+
+        class WeirdBoom:
+            transport = "stub"
+
+            def health(self):
+                raise KeyError("a bug in the probe itself")
+
+        svc.pool.workers[0] = TypedBoom()
+        svc.pool.workers[1] = WeirdBoom()
+        rows = svc.shard_health()
+        # typed failure: the shard really is unanswerable -> dead
+        assert rows[0]["replicas_live"] == 0
+        # unexpected failure: logged + counted, NOT reported dead
+        assert rows[1]["replicas_live"] == 1
+        assert svc._stats.data["health_probe_errors"] == 1
+    finally:
+        svc.pool.workers.clear()
+        svc.close()
